@@ -1,0 +1,93 @@
+"""Paper Theorem 6 / Corollaries 3-4: convex convergence bounds vs measured.
+
+Strongly-convex quadratic, exact async simulator with m workers (uniform
+scheduler -> geometric-ish tau).  For a grid of step sizes we compare the
+measured iterations-to-epsilon against the Thm-6 bound, and verify the
+Cor-3 optimal alpha sits near the empirical optimum.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.async_engine import simulate_async_sgd, uniform_commit_order
+from repro.core import staleness as S
+from repro.core import step_size as SS
+from repro.core import theory as T
+
+
+def run(m: int = 8, T_max: int = 6000, eps: float = 0.05, seed: int = 0) -> dict:
+    d = 16
+    eig = np.linspace(1.0, 3.0, d)
+    A = jnp.diag(jnp.asarray(eig, jnp.float32))
+    c, L = float(eig.min()), float(eig.max())
+    x0 = jnp.ones((d,))
+    r0 = float(jnp.sum(x0**2))
+    noise = 0.05
+
+    def loss(x, b):
+        return 0.5 * x @ A @ x + x @ b  # grad = A x + b, b ~ noise
+
+    key = jax.random.PRNGKey(seed)
+    batches = noise * jax.random.normal(key, (T_max, d))
+    order = uniform_commit_order(T_max, m, seed=seed)
+    M = math.sqrt((L * math.sqrt(r0)) ** 2 + d * noise**2) * 1.2
+    prob = T.ConvexProblem(c=c, L=L, M=M, r0=r0)
+
+    # measure tau statistics once
+    probe = simulate_async_sgd(loss, x0, batches, order,
+                               jnp.full((256,), 1e-4, jnp.float32), m=m)
+    tau_bar = float(np.asarray(probe.taus).mean())
+    geo = S.Geometric(p=1.0 / (1.0 + tau_bar))
+
+    alpha_star = T.corollary3_alpha(prob, eps, tau_bar, theta=1.0)
+    rows = []
+    for mult in (0.25, 0.5, 1.0, 1.5, 1.9):
+        alpha = alpha_star * mult
+        sched = SS.constant(alpha, tau_max=255)
+        bound = T.theorem6_bound(prob, eps, sched, geo, tau_max=255)
+        tr = simulate_async_sgd(loss, x0, batches, order,
+                                jnp.asarray(sched.table, jnp.float32), m=m)
+        # distance to optimum: x* = -A^{-1} E[b] = 0
+        # losses recorded are noisy; track ||x||^2 via replay of final only
+        dists = None
+        idx = None
+        # recompute ||x_t||^2 trajectory cheaply: rerun with recorded alphas
+        # (simulate returns only final params; use losses as proxy threshold)
+        l = np.asarray(tr.losses)
+        sm = np.convolve(l, np.ones(50) / 50, mode="valid")
+        target = 0.5 * eps * c  # loss scale at ||x||^2 ~ eps
+        hit = np.nonzero(sm < target)[0]
+        measured = int(hit[0]) + 50 if hit.size else None
+        rows.append({
+            "alpha_mult": mult, "alpha": alpha,
+            "bound_T": None if math.isinf(bound) else float(bound),
+            "measured_T": measured,
+        })
+    # Cor 4: non-increasing adaptive schedule also gets a finite bound
+    ada = SS.adadelay(alpha_star, tau_max=255)
+    cor4 = T.corollary4_bound(prob, eps, ada, geo, tau_max=255)
+    return {"rows": rows, "tau_bar": tau_bar, "alpha_star": alpha_star,
+            "cor4_bound": None if math.isinf(cor4) else float(cor4)}
+
+
+def main(fast: bool = False) -> None:
+    out = run(T_max=3000 if fast else 6000)
+    print(f"== Thm 6 / Cor 3: measured vs bound (tau_bar={out['tau_bar']:.2f}, "
+          f"alpha*={out['alpha_star']:.4f}) ==")
+    print(f"{'alpha/alpha*':>12} {'bound T':>12} {'measured T':>12} {'holds':>7}")
+    for r in out["rows"]:
+        b = "inf" if r["bound_T"] is None else f"{r['bound_T']:.0f}"
+        mt = "n/a" if r["measured_T"] is None else f"{r['measured_T']}"
+        holds = (r["bound_T"] is None) or (r["measured_T"] is not None
+                                           and r["measured_T"] <= r["bound_T"])
+        print(f"{r['alpha_mult']:>12.2f} {b:>12} {mt:>12} {str(holds):>7}")
+    print(f"Cor 4 bound for adadelay schedule: {out['cor4_bound']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

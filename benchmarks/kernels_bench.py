@@ -1,0 +1,132 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle timing on CPU,
+plus the analytic TPU roofline for each kernel's production shape.
+
+The interpret-mode wall times only prove correctness-path viability (the
+Python interpreter executes the kernel body); the roofline numbers are the
+real deliverable — what each kernel costs on a v5e chip at the shapes the
+assigned architectures use, and why the fused adaptive_update matters (1
+HBM pass vs 3 for the unfused server update).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HARDWARE
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run() -> list[dict]:
+    rows = []
+    BW = HARDWARE["hbm_bandwidth"]
+    PF = HARDWARE["peak_flops_bf16"]
+
+    # --- adaptive_update: the paper's server hot spot ---------------------
+    from repro.kernels.adaptive_update.ops import adaptive_update
+    from repro.kernels.adaptive_update.ref import adaptive_update_ref
+
+    n = 1 << 16
+    key = jax.random.PRNGKey(0)
+    p, g, v = jax.random.normal(key, (3, n))
+    a, mu = jnp.float32(0.01), jnp.float32(0.9)
+    t_k = _time(lambda: adaptive_update(p, g, v, a, mu))
+    t_r = _time(lambda: adaptive_update_ref(p, g, v, a, mu))
+    # production shape: one 7B-param f32 update
+    d = 7e9
+    bytes_fused = d * 4 * (3 + 2)  # read p,g,v; write p,v
+    bytes_unfused = d * 4 * (3 + 2 + 2)  # extra v round-trip between passes
+    rows.append({
+        "kernel": "adaptive_update", "shape": f"n={n}",
+        "t_kernel_us": t_k, "t_ref_us": t_r,
+        "tpu_roofline_ms": bytes_fused / BW * 1e3,
+        "tpu_unfused_ms": bytes_unfused / BW * 1e3,
+        "note": "7B f32 server update: fused 1-pass vs 3-pass",
+    })
+
+    # --- flash attention ---------------------------------------------------
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, S, Nq, Nkv, H = 1, 256, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Nq, H))
+    k = jax.random.normal(ks[1], (B, S, Nkv, H))
+    vv = jax.random.normal(ks[2], (B, S, Nkv, H))
+    t_k = _time(lambda: flash_attention(q, k, vv, block_q=64, block_k=64))
+    t_r = _time(lambda: attention_ref(q, k, vv))
+    # production: gemma2 32k prefill, one global layer per chip shard
+    s32, nh, hd = 32768, 2, 128  # heads/chip after model=16 sharding
+    fl = 4.0 * s32 * s32 * nh * hd * 0.5  # causal half
+    rows.append({
+        "kernel": "flash_attention", "shape": f"S={S}",
+        "t_kernel_us": t_k, "t_ref_us": t_r,
+        "tpu_roofline_ms": fl / PF * 1e3,
+        "note": "gemma2 32k prefill, per-chip global-layer attention FLOPs",
+    })
+
+    # --- selective scan ------------------------------------------------------
+    from repro.kernels.selective_scan.ops import selective_scan
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+
+    Bc, Sc, D, N = 1, 128, 32, 8
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (Bc, Sc, D))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (Bc, Sc, D)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[2], (D, N)))
+    Bm = jax.random.normal(ks[3], (Bc, Sc, N))
+    Cm = jax.random.normal(ks[4], (Bc, Sc, N))
+    t_k = _time(lambda: selective_scan(u, delta, A, Bm, Cm, block_d=D, chunk=32))
+    t_r = _time(lambda: selective_scan_ref(u, delta, A, Bm, Cm))
+    # falcon-mamba train: B*S tokens, d_inner=8192/16 per chip, N=16
+    toks, di, n16 = 256 * 4096, 8192 // 16, 16
+    bytes_scan = toks * di * 4 * 3  # u, delta in; y out (B/C small)
+    rows.append({
+        "kernel": "selective_scan", "shape": f"S={Sc},D={D},N={N}",
+        "t_kernel_us": t_k, "t_ref_us": t_r,
+        "tpu_roofline_ms": bytes_scan / BW * 1e3,
+        "note": "falcon-mamba train_4k per-chip scan traffic (HBM-bound)",
+    })
+
+    # --- rg-lru -------------------------------------------------------------
+    from repro.kernels.rg_lru.ops import rg_lru
+    from repro.kernels.rg_lru.ref import rg_lru_ref
+
+    W = 64
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (Bc, Sc, W)))
+    x = jax.random.normal(ks[1], (Bc, Sc, W))
+    t_k = _time(lambda: rg_lru(log_a, x, block_w=W, chunk=32))
+    t_r = _time(lambda: rg_lru_ref(log_a, x))
+    toks, w16 = 256 * 4096, 4096 // 16
+    bytes_lru = toks * w16 * 4 * 3
+    rows.append({
+        "kernel": "rg_lru", "shape": f"S={Sc},W={W}",
+        "t_kernel_us": t_k, "t_ref_us": t_r,
+        "tpu_roofline_ms": bytes_lru / BW * 1e3,
+        "note": "recurrentgemma train_4k per-chip recurrence traffic",
+    })
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    print("== Pallas kernels: interpret-mode check + TPU v5e roofline ==")
+    for r in run():
+        print(f"  {r['kernel']:<17} {r['shape']:<14} interp {r['t_kernel_us']:>9.0f}us "
+              f"ref {r['t_ref_us']:>8.0f}us  tpu~{r['tpu_roofline_ms']:.2f}ms  [{r['note']}]")
+        if "tpu_unfused_ms" in r:
+            print(f"  {'':<17} {'':<14} unfused tpu~{r['tpu_unfused_ms']:.2f}ms "
+                  f"-> fusion saves {r['tpu_unfused_ms'] - r['tpu_roofline_ms']:.2f}ms/update")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline: read the dry-run artifacts and emit the per-(arch x shape x mesh)
+three-term roofline table (compute / memory / collective seconds, dominant
+term, MODEL_FLOPS ratio).
+
+Source records come from ``python -m repro.launch.dryrun --all`` under
+experiments/dryrun/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_records(mesh: str = "pod1") -> list[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(f"_{mesh}.json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+MESH_DESC = {
+    "pod1x": "16x16=256 chips, per-layer costs via two-point depth extrapolation (§Roofline primary)",
+    "pod1": "16x16=256 chips, full-depth scanned compile (cost_analysis counts scan body once — compile proof only)",
+    "pod2": "2x16x16=512 chips, full-depth scanned compile (multi-pod sharding proof)",
+}
+
+
+def main(fast: bool = False) -> None:
+    for mesh in ("pod1x", "pod1", "pod2"):
+        recs = load_records(mesh)
+        if not recs:
+            print(f"(no {mesh} dry-run records; run python -m repro.launch.dryrun --all)")
+            continue
+        print(f"\n== Roofline table — {MESH_DESC[mesh]} ==")
+        hdr = f"{'arch':<22}{'shape':<13}{'T_comp':>10}{'T_mem':>10}{'T_coll':>10}" \
+              f"{'bound':<12}{'MF/HLO':>8}"
+        print(hdr)
+        for r in recs:
+            if r.get("status") == "skip":
+                print(f"{r['arch']:<22}{r['shape']:<13}{'skip: ' + r['reason']}")
+                continue
+            if r.get("status") != "ok":
+                print(f"{r['arch']:<22}{r['shape']:<13}FAILED: {r.get('error', '?')[:60]}")
+                continue
+            t = r["roofline"]
+            frac = r.get("useful_compute_fraction")
+            print(
+                f"{r['arch']:<22}{r['shape']:<13}"
+                f"{t['t_compute_s']:>10.2e}{t['t_memory_s']:>10.2e}{t['t_collective_s']:>10.2e}"
+                f"  {t['dominant']:<10}"
+                f"{frac if frac is None else f'{frac:>8.2f}'}"
+            )
+
+
+if __name__ == "__main__":
+    main()

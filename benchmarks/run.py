@@ -1,0 +1,63 @@
+"""Benchmark driver — one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Sections:
+  tau_models    Table I + Fig 2  (staleness-model fit quality)
+  convergence   Fig 3            (AsyncPSGD vs MindTheStep iterations)
+  sync_scaling  Theorem 1        (effective batch, variance scaling)
+  convex_bounds Thm 6 / Cor 3-4  (measured vs analytic bounds)
+  kernels       (system)         Pallas kernels + TPU roofline
+  roofline      (system)         dry-run roofline table per arch x shape
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    ablation_momentum,
+    convergence,
+    convex_bounds,
+    kernels_bench,
+    roofline,
+    sync_scaling,
+    tau_models,
+)
+
+SECTIONS = {
+    "tau_models": tau_models.main,
+    "convergence": convergence.main,
+    "sync_scaling": sync_scaling.main,
+    "convex_bounds": convex_bounds.main,
+    "kernels": kernels_bench.main,
+    "roofline": roofline.main,
+    "ablation_momentum": ablation_momentum.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", help="reduced iteration counts")
+    ap.add_argument("--only", choices=list(SECTIONS), default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(SECTIONS)
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 72}\n>> benchmark: {name}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        try:
+            SECTIONS[name](fast=args.fast)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"<< {name} done in {time.perf_counter() - t0:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving example: prefill a prompt batch, then greedy-decode with
+the per-layer-type KV/state caches (full, ring, SSM, RG-LRU).
+
+Uses the reduced recurrentgemma config by default — the hybrid cache is the
+interesting one (RG-LRU state + conv ring + local-attention ring cache).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-9b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.data import make_batch_for
+from repro.models import model as M
+from repro.training import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-9b", choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    capacity = args.prompt_len + args.gen
+    batch = make_batch_for(cfg, batch=args.batch, seq=args.prompt_len, seed=0)
+
+    t0 = time.perf_counter()
+    if cfg.is_encoder_decoder:
+        cache = M.init_decode_state(params, cfg, args.batch, capacity,
+                                    cache_dtype=jnp.float32, batch=batch)
+        last = batch["tokens"][:, 0]
+        start = 0
+    else:
+        logits, cache = M.prefill(params, batch, cfg, capacity, cache_dtype=jnp.float32)
+        last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        start = args.prompt_len
+    print(f"[{cfg.name}] prefill {args.prompt_len} tokens x {args.batch}: "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    serve = jax.jit(make_serve_step(cfg))
+    toks = [last]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        out = serve(params, cache, toks[-1], jnp.int32(start + i))
+        toks.append(out["next_token"])
+        cache = out["cache"]
+    jax.block_until_ready(toks[-1])
+    dt = time.perf_counter() - t0
+    gen = jnp.stack(toks[1:], axis=1)
+    print(f"decode {args.gen} steps: {dt:.2f}s  "
+          f"({args.gen * args.batch / dt:.1f} tok/s incl. compile)")
+    print("sample token ids:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

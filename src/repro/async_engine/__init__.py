@@ -1,0 +1,20 @@
+from repro.async_engine.events import EventSimConfig, simulate_staleness_trace
+from repro.async_engine.exact import AsyncTrace, simulate_async_sgd, uniform_commit_order
+from repro.async_engine.delayed import (
+    DelayedGradients,
+    init_delayed,
+    sample_tau,
+    delayed_apply,
+)
+
+__all__ = [
+    "EventSimConfig",
+    "simulate_staleness_trace",
+    "AsyncTrace",
+    "simulate_async_sgd",
+    "uniform_commit_order",
+    "DelayedGradients",
+    "init_delayed",
+    "sample_tau",
+    "delayed_apply",
+]

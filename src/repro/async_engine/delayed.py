@@ -1,0 +1,91 @@
+"""SPMD async-as-delay: the paper's technique on the production mesh.
+
+True lock-free asynchrony does not exist inside one XLA program (lock-step
+collectives).  What the paper's math actually depends on is only the
+*staleness distribution* of applied gradients (Lemma 1 onward) — so on the
+mesh we realize asynchrony as **delayed gradient application**: a ring buffer
+holds the last ``K`` gradient pytrees (sharded like the parameters, bf16);
+each step pushes the fresh gradient and applies one delayed by ``tau``
+sampled from the fitted CMP/Poisson staleness model.  The update is then
+
+    x <- x - alpha(tau) * g_{t - tau}
+
+with ``alpha(tau)`` from :mod:`repro.core.step_size` — eq. (4) with the
+MindTheStep adaptive step.  This preserves every equation of the paper while
+riding the pjit/shard_map distribution (see DESIGN.md §3 hardware-adaptation).
+
+All state lives in one pytree so it pjit-shards with the optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DelayedGradients", "init_delayed", "sample_tau", "delayed_apply", "staleness_cdf"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DelayedGradients:
+    """Ring buffer of in-flight gradients.
+
+    ring: pytree of (K, ...) arrays — slot ``t % K`` holds gradient of step t.
+    step: int32 scalar — number of gradients pushed so far.
+    """
+
+    ring: Any
+    step: jnp.ndarray
+
+
+def init_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradients:
+    ring = jax.tree.map(lambda p: jnp.zeros((K,) + p.shape, dtype), params)
+    return DelayedGradients(ring=ring, step=jnp.zeros((), jnp.int32))
+
+
+def staleness_cdf(pmf: np.ndarray) -> jnp.ndarray:
+    """Precompute the inverse-CDF sampling table for in-jit tau draws."""
+    p = np.asarray(pmf, dtype=np.float64)
+    p = p / p.sum()
+    return jnp.asarray(np.cumsum(p), jnp.float32)
+
+
+def sample_tau(key: jax.Array, cdf: jnp.ndarray) -> jnp.ndarray:
+    """Draw tau ~ the fitted staleness model via inverse CDF (int32 scalar)."""
+    u = jax.random.uniform(key, ())
+    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+
+
+def delayed_apply(
+    state: DelayedGradients,
+    new_grad: Any,
+    tau: jnp.ndarray,
+) -> tuple[Any, jnp.ndarray, DelayedGradients]:
+    """Push ``new_grad``; pop the gradient from ``tau`` steps ago.
+
+    Returns ``(delayed_grad, live, new_state)`` where ``live`` is 0.0 while
+    the requested slot predates the run (warmup) or exceeds the ring capacity
+    — the caller multiplies the step size by ``live`` (the paper's drop rule
+    for tau > tau_drop maps to tau >= K here).
+    """
+    K = jax.tree.leaves(state.ring)[0].shape[0]
+    t = state.step
+    slot = jnp.mod(t, K)
+    ring = jax.tree.map(
+        lambda r, g: jax.lax.dynamic_update_index_in_dim(
+            r, g.astype(r.dtype), slot, axis=0
+        ),
+        state.ring,
+        new_grad,
+    )
+    src_step = t - tau
+    src_slot = jnp.mod(src_step, K)
+    live = ((src_step >= 0) & (tau < K)).astype(jnp.float32)
+    delayed = jax.tree.map(
+        lambda r: jax.lax.dynamic_index_in_dim(r, src_slot, axis=0, keepdims=False), ring
+    )
+    return delayed, live, DelayedGradients(ring=ring, step=t + 1)

@@ -1,0 +1,112 @@
+"""Event-driven scheduler simulator -> realistic staleness traces.
+
+The paper (§IV, "Applicability of geometric tau") decomposes a gradient's
+staleness ``tau = tau_C + tau_S``:
+
+* ``tau_C`` — updates applied by others *while* the worker computes its
+  gradient (dominated by the compute-time distribution);
+* ``tau_S`` — updates applied after the computation finishes but before the
+  scheduler lets this worker commit (under a uniform fair scheduler this
+  part is geometric).
+
+This module reproduces that mechanism as a discrete-event simulation of
+``m`` workers with configurable compute-time distributions and a serial
+server apply time.  With ``compute_time >> apply_time`` (the deep-learning
+regime) the resulting tau histogram is CMP/Poisson-shaped with mode ~ m-1;
+with ``compute_time << apply_time`` it degenerates to the geometric shape —
+exactly the paper's Table I / Fig 2 narrative, which `benchmarks/tau_models.py`
+quantifies with Bhattacharyya distances.
+
+Host-side numpy only (this generates *traces*; the JAX simulators consume
+them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+__all__ = ["EventSimConfig", "simulate_staleness_trace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EventSimConfig:
+    """Timing model for the event simulation.
+
+    compute: gradient-computation time ~ Gamma(shape, mean/shape) per worker;
+             heterogeneity scales each worker's mean by U[1-h, 1+h].
+    apply:   server apply time (the paper's "d multiply-adds"), exponential.
+    """
+
+    m: int
+    compute_mean: float = 1.0
+    compute_shape: float = 16.0  # Gamma shape; larger = more deterministic
+    apply_mean: float = 0.02
+    heterogeneity: float = 0.1
+    jitter: float = 0.0  # extra exponential scheduling delay before commit
+
+
+def simulate_staleness_trace(
+    cfg: EventSimConfig,
+    num_updates: int,
+    seed: int = 0,
+    *,
+    return_workers: bool = False,
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Run the event simulation and return the staleness of each committed
+    update, in commit order (shape ``(num_updates,)``, int64).  With
+    ``return_workers`` also return which worker made each commit — feed that
+    to :func:`repro.async_engine.exact.simulate_async_sgd` as the commit
+    order to couple the exact simulator to realistic timing.
+
+    Mechanism: each worker loops [read x at current commit count] ->
+    [compute for ~Gamma time] -> [wait for the scheduler] -> [commit].
+    Staleness of a commit = commits applied since that worker's read.
+    """
+    rng = np.random.default_rng(seed)
+    m = cfg.m
+    worker_speed = 1.0 + cfg.heterogeneity * (2.0 * rng.random(m) - 1.0)
+
+    def compute_time(w: int) -> float:
+        scale = cfg.compute_mean * worker_speed[w] / cfg.compute_shape
+        t = rng.gamma(cfg.compute_shape, scale)
+        if cfg.jitter > 0:
+            t += rng.exponential(cfg.jitter)
+        return t
+
+    # Compute-finish event queue holds (finish_time, tiebreak, worker, read_count).
+    events: list[tuple[float, int, int, int]] = []
+    tiebreak = 0
+    for w in range(m):
+        heapq.heappush(events, (compute_time(w), tiebreak, w, 0))
+        tiebreak += 1
+
+    # Gradients whose computation has finished, awaiting the scheduler.
+    ready: list[tuple[int, int]] = []  # (worker, read_count)
+    commits = 0
+    clock = 0.0
+    taus = np.empty(num_updates, dtype=np.int64)
+    workers = np.empty(num_updates, dtype=np.int32)
+
+    while commits < num_updates:
+        # Pull every computation that has finished by `clock` into the pool.
+        while events and events[0][0] <= clock:
+            _, _, w, rc = heapq.heappop(events)
+            ready.append((w, rc))
+        if not ready:
+            # Server idles until the next gradient arrives.
+            clock = max(clock, events[0][0])
+            continue
+        # Uniform fair stochastic scheduler (the paper's tau_S model): the
+        # server picks a *random* ready gradient, not FIFO.
+        w, read_count = ready.pop(rng.integers(len(ready)))
+        clock += rng.exponential(cfg.apply_mean)  # the apply itself
+        taus[commits] = commits - read_count
+        workers[commits] = w
+        commits += 1
+        # Worker reads the fresh state and starts its next gradient.
+        heapq.heappush(events, (clock + compute_time(w), tiebreak, w, commits))
+        tiebreak += 1
+    return (taus, workers) if return_workers else taus

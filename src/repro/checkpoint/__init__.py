@@ -1,0 +1,3 @@
+from repro.checkpoint.store import save_pytree, load_pytree, save_train_state, load_train_state
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state", "load_train_state"]

@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> (npz arrays + json structure).
+
+Flat-keyed npz for arrays, a json sidecar for the tree structure (so any
+nested dict/dataclass pytree round-trips).  Arrays are gathered to host —
+fine for the CPU validation path; the restore target resharding is the
+caller's concern (pass the restored tree through ``jax.device_put`` with the
+desired shardings).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state", "load_train_state"]
+
+_SEP = "␟"  # symbol-for-unit-separator: unlikely in key names
+
+
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = [f"leaf{_SEP}{i}" for i in range(len(leaves))]
+    arrays = {p: np.asarray(l) for p, l in zip(paths, leaves)}
+    return arrays, treedef
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    """Write ``path``.npz (arrays) + ``path``.json (structure)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(arrays)}, f)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    data = np.load(path + ".npz")
+    leaves_like, treedef = jax.tree.flatten(like)
+    n = len(leaves_like)
+    assert len(data.files) == n, f"checkpoint has {len(data.files)} leaves, expected {n}"
+    leaves = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf{_SEP}{i}"]
+        if hasattr(ref, "shape"):
+            assert tuple(arr.shape) == tuple(ref.shape), (
+                f"leaf {i}: checkpoint shape {arr.shape} != expected {ref.shape}"
+            )
+            arr = arr.astype(ref.dtype)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def save_train_state(path: str, state: Any, step: int) -> None:
+    save_pytree(os.path.join(path, f"step_{step:08d}"), state)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+
+
+def load_train_state(path: str, like: Any, step: int | None = None) -> tuple[Any, int]:
+    if step is None:
+        with open(os.path.join(path, "latest")) as f:
+            step = int(f.read().strip())
+    return load_pytree(os.path.join(path, f"step_{step:08d}"), like), step

@@ -1,0 +1,108 @@
+"""Online staleness-distribution estimation.
+
+MindTheStep adapts ``alpha(tau)`` *online*: the parameter server observes each
+update's staleness, maintains a histogram, and periodically refits the
+distribution model (paper §IV: the mode relation ``lam^{1/nu} = m`` reduces the
+CMP fit to a 1-D search; for Poisson, ``lam = m`` directly).
+
+The estimator lives host-side between jitted steps (updates are O(1) numpy);
+its product — a :class:`~repro.core.step_size.StepSizeSchedule` table — is the
+jit-facing artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import staleness as S
+from repro.core import step_size as SS
+
+__all__ = ["OnlineStalenessEstimator"]
+
+
+@dataclasses.dataclass
+class OnlineStalenessEstimator:
+    """Streaming histogram + model refitting + schedule rebuilding.
+
+    Parameters
+    ----------
+    m:          number of workers (drives the mode relation, eq. 13).
+    tau_max:    histogram support (the paper drops tau > 150 anyway).
+    decay:      exponential forgetting applied at each refit so the estimator
+                tracks non-stationary schedulers (beyond-paper, documented).
+    """
+
+    m: int
+    tau_max: int = 256
+    decay: float = 1.0
+    counts: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    n_seen: int = 0
+
+    def __post_init__(self):
+        if self.counts is None:
+            self.counts = np.zeros(self.tau_max + 1, dtype=np.float64)
+
+    def observe(self, tau) -> None:
+        taus = np.atleast_1d(np.asarray(tau, dtype=np.int64))
+        np.add.at(self.counts, np.clip(taus, 0, self.tau_max), 1.0)
+        self.n_seen += taus.size
+
+    def pmf(self) -> np.ndarray:
+        total = self.counts.sum()
+        if total == 0:
+            # uninformed prior: Poisson(m) — the paper's default hypothesis
+            return S.Poisson(float(max(self.m, 1))).pmf_table(self.tau_max)
+        return self.counts / total
+
+    def mean_tau(self) -> float:
+        p = self.pmf()
+        return float(np.sum(np.arange(len(p)) * p))
+
+    def fit(self, family: str = "cmp") -> S.StalenessModel:
+        """Refit the chosen family to the current histogram."""
+        p = self.pmf()
+        if family == "poisson":
+            # lam = observed mean; the paper's Table I finds lam ~= m.
+            lam = max(self.mean_tau(), 1e-3)
+            model: S.StalenessModel = S.Poisson(lam)
+        elif family == "cmp":
+            model = S.CMP.fit_mode_relation(p, max(self.m, 1), is_pmf=True)
+        elif family == "geometric":
+            mean = self.mean_tau()
+            model = S.Geometric(p=1.0 / (1.0 + mean))
+        elif family == "uniform":
+            nz = np.nonzero(p > 0)[0]
+            model = S.BoundedUniform(int(nz[-1]) if nz.size else 0)
+        else:
+            raise ValueError(f"unknown family {family!r}")
+        if self.decay < 1.0:
+            self.counts *= self.decay
+        return model
+
+    def rebuild_schedule(
+        self,
+        strategy: str,
+        alpha_c: float,
+        *,
+        family: str = "poisson",
+        K: float = 1.0,
+        mu_star: float = 0.0,
+        clip_factor: float | None = 5.0,
+        tau_drop: int | None = 150,
+        normalize: bool = True,
+    ) -> SS.StepSizeSchedule:
+        """Fit the model and build the paper-protocol schedule in one call."""
+        model = self.fit(family)
+        return SS.make_schedule(
+            strategy,
+            alpha_c,
+            model,
+            K=K,
+            mu_star=mu_star,
+            tau_max=self.tau_max,
+            normalize_pmf=self.pmf() if normalize else None,
+            clip_factor=clip_factor,
+            tau_drop=tau_drop,
+        )

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    lm_batches,
+    classification_batches,
+    cifar_like_batches,
+    make_batch_for,
+)
+
+__all__ = ["lm_batches", "classification_batches", "cifar_like_batches", "make_batch_for"]

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the compute hot spots (validated with interpret=True).
+
+* ``adaptive_update``  — the paper's parameter-server apply, fused (scale +
+  momentum + update in one HBM pass).
+* ``flash_attention``  — blockwise online-softmax attention (window/softcap/GQA).
+* ``selective_scan``   — Mamba-1 recurrence, chunked over time.
+* ``rg_lru``           — Griffin gated linear recurrence, chunked over time.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle).  ``ON_TPU`` gates interpret mode.
+"""
+
+import jax
+
+ON_TPU = jax.default_backend() == "tpu"
+
+from repro.kernels.adaptive_update.ops import adaptive_update, adaptive_update_tree  # noqa: E402
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.rg_lru.ops import rg_lru  # noqa: E402
+from repro.kernels.selective_scan.ops import selective_scan  # noqa: E402
+
+__all__ = [
+    "ON_TPU",
+    "adaptive_update",
+    "adaptive_update_tree",
+    "flash_attention",
+    "rg_lru",
+    "selective_scan",
+]

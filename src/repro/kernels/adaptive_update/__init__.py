@@ -1,0 +1,3 @@
+from repro.kernels.adaptive_update.ops import adaptive_update, adaptive_update_tree
+
+__all__ = ["adaptive_update", "adaptive_update_tree"]

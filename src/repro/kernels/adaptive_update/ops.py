@@ -1,0 +1,53 @@
+"""Jit wrappers: flatten pytree leaves -> padded (R, 128) tiles -> fused kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.adaptive_update.kernel import BLOCK_ROWS, LANES, fused_update_call
+
+__all__ = ["adaptive_update", "adaptive_update_tree"]
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _to_tiles(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+def adaptive_update(p, g, v, alpha, mu, *, interpret: bool = True):
+    """Fused v' = mu v - alpha g; p' = p + v' on one array (any shape)."""
+    p2d, n = _to_tiles(p)
+    g2d, _ = _to_tiles(g.astype(p.dtype))
+    v2d, _ = _to_tiles(v)
+    p_new, v_new = fused_update_call(
+        p2d, g2d, v2d, jnp.asarray(alpha, jnp.float32), jnp.asarray(mu, jnp.float32),
+        interpret=interpret,
+    )
+    return (
+        p_new.reshape(-1)[:n].reshape(p.shape),
+        v_new.reshape(-1)[:n].reshape(v.shape),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adaptive_update_tree(params, grads, vel, alpha, mu, *, interpret: bool = True):
+    """Apply the fused update across a whole parameter pytree."""
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_v = treedef.flatten_up_to(vel)
+    out_p, out_v = [], []
+    for p, g, v in zip(leaves_p, leaves_g, leaves_v):
+        np_, nv = adaptive_update(p, g, v, alpha, mu, interpret=interpret)
+        out_p.append(np_)
+        out_v.append(nv)
+    return jax.tree.unflatten(treedef, out_p), jax.tree.unflatten(treedef, out_v)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused adaptive update."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adaptive_update_ref", "adaptive_update_tree_ref"]
+
+
+def adaptive_update_ref(p, g, v, alpha, mu):
+    """v' = mu v - alpha g;  p' = p + v'  (elementwise, f32 accumulate)."""
+    v_new = mu * v.astype(jnp.float32) - alpha * g.astype(jnp.float32)
+    p_new = p.astype(jnp.float32) + v_new
+    return p_new.astype(p.dtype), v_new.astype(v.dtype)
+
+
+def adaptive_update_tree_ref(params, grads, vel, alpha, mu):
+    flat = jax.tree.map(
+        lambda p, g, v: adaptive_update_ref(p, g, v, alpha, mu), params, grads, vel,
+        is_leaf=lambda x: isinstance(x, jnp.ndarray),
+    )
+    new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_v

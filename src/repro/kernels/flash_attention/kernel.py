@@ -1,0 +1,133 @@
+"""Blockwise (flash) attention — Pallas TPU kernel.
+
+Online-softmax attention over (block_q x block_k) VMEM tiles; the S x T score
+matrix never exists.  Grid = (B * Nq, num_q_blocks, num_k_blocks) with the KV
+block axis innermost — on TPU the innermost grid dimension executes
+sequentially per core, so the running (max, sum, acc) state lives in VMEM
+scratch across KV iterations and the output tile is written exactly once, on
+the final KV block.
+
+Supports: causal masking, sliding windows (gemma2/3, recurrentgemma local
+layers), logit softcapping (gemma2), and GQA (the k/v BlockSpec index_map
+folds the query-head index onto its KV group, so KV tiles are fetched once
+per group — no host-side head replication).
+
+Tiles default to (512, 512); with H=128 the VMEM working set is
+q + k + v + acc + p ~= 5 * 512*128*4B ~= 1.3 MiB, comfortably inside the
+~16 MiB/core budget, and all matmul dims are multiples of the 128-wide MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, nk: int, t_real: int,
+    causal: bool, window: int | None, softcap: float | None, scale: float,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, H)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, H)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < t_real  # mask the KV padding tail
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= (qpos - kpos) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev) - m_safe)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "t_real", "interpret"),
+)
+def flash_attention_call(
+    q: jnp.ndarray,  # (B, Nq, Sp, H)  Sp % block_q == 0
+    k: jnp.ndarray,  # (B, Nkv, Tp, H) Tp % block_k == 0
+    v: jnp.ndarray,
+    *,
+    t_real: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Nq, Sp, H = q.shape
+    Nkv, Tp = k.shape[1], k.shape[2]
+    G = Nq // Nkv
+    nq, nk = Sp // block_q, Tp // block_k
+    grid = (B * Nq, nq, nk)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, H), lambda bh, iq, ik: (bh // Nq, bh % Nq, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, H), lambda bh, iq, ik: (bh // Nq, (bh % Nq) // G, ik, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, H), lambda bh, iq, ik: (bh // Nq, bh % Nq, iq, 0))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=block_q, bk=block_k, nk=nk, t_real=t_real,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, H), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""Jit wrapper: (B, S, N, H) layout -> padded head-major tiles -> kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, Nq, H) — model layout
+    k: jnp.ndarray,  # (B, T, Nkv, H)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, Nq, H = q.shape
+    T = k.shape[1]
+    scale = H**-0.5 if scale is None else scale
+    bq, bk = min(block_q, max(S, 8)), min(block_k, max(T, 8))
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, Nq, S, H)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    out = flash_attention_call(
+        qt, kt, vt,
+        t_real=T, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :, :S].transpose(0, 2, 1, 3)

@@ -1,0 +1,47 @@
+"""Naive full-matrix attention oracle (materializes the score matrix).
+
+Matches the kernel's semantics exactly: contiguous positions, causal /
+window / softcap masking, GQA by head grouping, f32 softmax.
+Only for test shapes — O(S*T) memory.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, S, Nq, H)
+    k: jnp.ndarray,  # (B, T, Nkv, H)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, S, Nq, H = q.shape
+    T, Nkv = k.shape[1], k.shape[2]
+    G = Nq // Nkv
+    scale = H**-0.5 if scale is None else scale
+
+    qg = q.reshape(B, S, Nkv, G, H).astype(jnp.float32) * scale
+    s = jnp.einsum("bsngh,btnh->bngst", qg, k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = np.arange(S)[:, None]
+    kpos = np.arange(T)[None, :]
+    valid = np.ones((S, T), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= (qpos - kpos) < window
+    s = jnp.where(jnp.asarray(valid)[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bngst,btnh->bsngh", p / l, v.astype(jnp.float32))
+    return out.reshape(B, S, Nq, H).astype(v.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rg_lru.ops import rg_lru
+
+__all__ = ["rg_lru"]

@@ -1,0 +1,67 @@
+"""RG-LRU gated linear recurrence — Pallas TPU kernel.
+
+    h_t = exp(log_a_t) * h_{t-1} + x_t            (elementwise over width W)
+
+Same TPU shape as the selective scan: grid (batch, width_blocks, time_chunks),
+time innermost/sequential, per-(batch, width-block) state (1, block_w) in VMEM
+scratch.  Within a chunk the recurrence is a length-``chunk`` ``fori_loop`` of
+(block_w,) VPU ops.
+
+A chunked *associative-scan* formulation (h = cumprod(a) * cumsum(x/cumprod))
+would trade the serial loop for two passes but loses exactness for long
+chunks (cumprod underflow); the Griffin reference keeps the sequential form,
+and so do we — the arithmetic intensity is O(1) either way and the kernel is
+HBM-bound: one read of (log_a, x), one write of h per element.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rg_lru_call"]
+
+
+def _lru_kernel(loga_ref, x_ref, y_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        a = jnp.exp(loga_ref[0, t].astype(jnp.float32))  # (bw,)
+        h = a * h + x_ref[0, t].astype(jnp.float32)
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h_ref[0] = jax.lax.fori_loop(0, chunk, step, h_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
+def rg_lru_call(
+    log_a: jnp.ndarray,  # (B, S, W) f32, <= 0
+    x_in: jnp.ndarray,  # (B, S, W) f32
+    *,
+    block_w: int = 512,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, W = log_a.shape
+    assert W % block_w == 0 and S % chunk == 0
+    grid = (B, W // block_w, S // chunk)
+    spec = pl.BlockSpec((1, chunk, block_w), lambda b, iw, ic: (b, ic, iw))
+    kernel = functools.partial(_lru_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(log_a, x_in)

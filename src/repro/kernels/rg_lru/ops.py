@@ -1,0 +1,26 @@
+"""Jit wrapper: pad width/time to tile multiples, call the kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rg_lru.kernel import rg_lru_call
+
+__all__ = ["rg_lru"]
+
+
+def rg_lru(
+    log_a: jnp.ndarray, x_in: jnp.ndarray, *, block_w: int = 512, chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, W = log_a.shape
+    bw = min(block_w, W)
+    ck = min(chunk, S)
+    pad_w = (-W) % bw
+    pad_s = (-S) % ck
+    if pad_w or pad_s:
+        padding = ((0, 0), (0, pad_s), (0, pad_w))
+        log_a = jnp.pad(log_a, padding)
+        x_in = jnp.pad(x_in, padding)
+    y = rg_lru_call(log_a, x_in, block_w=bw, chunk=ck, interpret=interpret)
+    return y[:, :S, :W]

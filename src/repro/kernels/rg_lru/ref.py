@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RG-LRU recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rg_lru_ref"]
+
+
+def rg_lru_ref(log_a: jnp.ndarray, x_in: jnp.ndarray) -> jnp.ndarray:
+    """h_t = exp(log_a_t) h_{t-1} + x_t, h_0 = 0.  (B, S, W) -> (B, S, W)."""
+
+    def step(h, xs):
+        la, x = xs
+        h = jnp.exp(la) * h + x
+        return h, h
+
+    B, S, W = log_a.shape
+    h0 = jnp.zeros((B, W), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (log_a.astype(jnp.float32).transpose(1, 0, 2), x_in.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2)

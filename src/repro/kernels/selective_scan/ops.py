@@ -1,0 +1,38 @@
+"""Jit wrapper: pad channel/time dims to tile multiples, call the kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan_call
+
+__all__ = ["selective_scan"]
+
+
+def selective_scan(
+    u: jnp.ndarray,
+    delta: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    block_d: int = 512,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, D = u.shape
+    bd = min(block_d, D)
+    ck = min(chunk, S)
+    pad_d = (-D) % bd
+    pad_s = (-S) % ck
+    if pad_d:
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad_d)))
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pad_d)))
+        A = jnp.pad(A, ((0, pad_d), (0, 0)))
+    if pad_s:
+        u = jnp.pad(u, ((0, 0), (0, pad_s), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_s), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad_s), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad_s), (0, 0)))
+    y = selective_scan_call(u, delta, A, Bm, Cm, block_d=bd, chunk=ck, interpret=interpret)
+    return y[:, :S, :D]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective scan (no d_skip, matching the kernel)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["selective_scan_ref"]
+
+
+def selective_scan_ref(u, delta, A, Bm, Cm):
+    """u/delta: (B, S, D); A: (D, N); Bm/Cm: (B, S, N) -> y (B, S, D) f32."""
+    dA = jnp.exp(delta[..., None].astype(jnp.float32) * A[None, None])
+    dBu = delta[..., None] * Bm[:, :, None, :] * u.astype(jnp.float32)[..., None]
+
+    def step(h, xs):
+        dA_t, dBu_t, C_t = xs
+        h = dA_t * h + dBu_t
+        return h, jnp.einsum("bdn,bn->bd", h, C_t)
+
+    B, S, D, N = dA.shape
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (dA.transpose(1, 0, 2, 3), dBu.transpose(1, 0, 2, 3),
+         Cm.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,96 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` supplies FLOPs and HBM bytes but not collective traffic;
+we parse the optimized HLO text and sum the *result* sizes of every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction (for all-reduce the operand and result
+sizes coincide; for all-gather the result is the full gathered buffer —
+bytes actually moved per chip are ~(n-1)/n of that; we report the
+conservative full size).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch.mesh import HARDWARE
+
+__all__ = ["parse_collective_bytes", "roofline_terms", "model_flops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.  %all-gather.1 = bf16[2,16,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind over the whole module."""
+    totals: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        m = re.match(r"\s*(?:\(?[\w.%-]*\)?\s*)?", rhs)
+        # identify which collective op this instruction is (start-anchored on
+        # the op name after the result shape(s))
+        for coll in _COLLECTIVES:
+            # `<shapes> all-gather(` — op name followed by (  or -start/-done
+            if re.search(rf"\]\S*\s+{coll}(-start|-done)?\(", rhs):
+                if coll != "all-gather" and f"{coll}-done(" in rhs:
+                    continue  # bytes already counted at the -start op
+                shapes = _SHAPE_RE.findall(rhs.split(coll)[0])
+                totals[coll] += sum(_shape_bytes(d, s) for d, s in shapes)
+                break
+    totals["total"] = sum(totals[c] for c in _COLLECTIVES)
+    return totals
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float,
+    *,
+    num_chips: int,
+    per_device: bool = True,
+) -> dict[str, float]:
+    """The three roofline terms in seconds.
+
+    ``per_device=True`` means flops/bytes already describe ONE chip's share
+    (XLA cost_analysis on the partitioned module); otherwise divide by chips.
+    """
+    div = 1.0 if per_device else float(num_chips)
+    t_comp = (flops / div) / HARDWARE["peak_flops_bf16"]
+    t_mem = (hbm_bytes / div) / HARDWARE["hbm_bandwidth"]
+    links = HARDWARE["ici_links_per_chip"] * HARDWARE["ici_link_bandwidth"]
+    t_coll = (collective_bytes / div) / links
+    dominant = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))[1]
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, *, batch: int, seq: int, kind: str) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params."""
+    n_active = cfg.active_param_count()
+    tokens = batch * seq if kind in ("train", "prefill") else batch  # decode: 1 tok
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

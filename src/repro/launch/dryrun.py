@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_FAKE_DEVICES", "512")
+    + " " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory/cost/collective analysis for §Roofline.
+
+MUST be launched as its own process (jax locks the device count on first
+init — the two lines above run before any jax import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --extrapolate   # roofline
+
+Modes:
+  (default)      lower+compile the production config (scan-over-layers) —
+                 proves the sharded program compiles at full depth.
+  --unroll       unroll the layer stack: honest cost_analysis (XLA counts a
+                 while-loop body once) but slow compiles at full depth.
+  --extrapolate  the roofline mode: compile UNROLLED at 1x and 2x the layer
+                 pattern period, extrapolate costs linearly to full depth
+                 (per-layer costs are depth-independent; embeddings/logits
+                 live in the intercept).  Fast AND honest.
+
+``REPRO_FAKE_DEVICES`` (default 512) lets CI tests run a tiny 8-device mesh.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.sharding import specs as sharding_specs  # noqa: E402
+from repro.launch.analysis import model_flops, parse_collective_bytes, roofline_terms  # noqa: E402
+from repro.launch.input_specs import cfg_for, specs_for_cfg, step_for_cfg  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_small_mesh  # noqa: E402
+from repro.sharding.ctx import use_sharding_rules  # noqa: E402
+from repro.sharding.specs import auto_shardings  # noqa: E402
+
+SKIPS: dict[tuple[str, str], str] = {
+    # long_500k needs sub-quadratic attention (DESIGN.md §4): pure
+    # full-attention archs skip it.
+    ("codeqwen1.5-7b", "long_500k"): "pure full attention (O(S^2) at 500k)",
+    ("stablelm-1.6b", "long_500k"): "pure full attention",
+    ("internvl2-2b", "long_500k"): "full-attention LM backbone",
+    ("qwen2-moe-a2.7b", "long_500k"): "full attention",
+    ("qwen3-moe-235b-a22b", "long_500k"): "full attention",
+    ("whisper-large-v3", "long_500k"): "enc-dec, full-attention decoder",
+}
+
+
+def _lower_and_analyze(cfg, shape_name: str, mesh, *, save_hlo: str | None = None) -> dict:
+    """Core: jit(step).lower(specs).compile() + extract all analyses."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    t0 = time.perf_counter()
+    step = step_for_cfg(cfg, shape_name)
+    specs = specs_for_cfg(cfg, shape_name)
+
+    with mesh, use_sharding_rules(mesh):
+        in_sh = auto_shardings(specs, mesh, batch)
+        out_sds = jax.eval_shape(step, *specs)
+        out_sh = auto_shardings(out_sds, mesh, batch)
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*specs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+
+    coll = parse_collective_bytes(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+
+
+def _reduced_depth(cfg, num_layers: int):
+    upd = {"num_layers": num_layers, "scan_layers": False}
+    if cfg.is_encoder_decoder:
+        upd["num_encoder_layers"] = num_layers
+    return dataclasses.replace(cfg, **upd)
+
+
+def _mesh_for(args):
+    if args.small_mesh:
+        return make_small_mesh()
+    return make_production_mesh(multi_pod=args.multi_pod)
+
+
+def _finish_record(arch, cfg, shape_name, mesh, core: dict) -> dict:
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    num_chips = mesh.devices.size
+    terms = roofline_terms(core["flops"], core["hbm_bytes"],
+                           core["collectives"]["total"], num_chips=num_chips)
+    mf = model_flops(cfg, batch=batch, seq=seq, kind=kind)
+    return {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "num_chips": num_chips, "seq": seq, "batch": batch,
+        "status": "ok",
+        **{k: core[k] for k in ("lower_s", "compile_s", "memory", "collectives")},
+        "cost": {"flops": core["flops"], "hbm_bytes": core["hbm_bytes"],
+                 "transcendentals": core["transcendentals"]},
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / num_chips,
+        "useful_compute_fraction": (mf / num_chips) / core["flops"] if core["flops"] else None,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "method": core.get("method", "direct"),
+    }
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               small_mesh: bool = False, save_hlo: str | None = None,
+               unroll: bool = False, overrides: dict | None = None) -> dict:
+    """Lower+compile one combination at full depth; return the record."""
+    cfg = cfg_for(arch, unroll=unroll)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_small_mesh() if small_mesh else make_production_mesh(multi_pod=multi_pod)
+    core = _lower_and_analyze(cfg, shape_name, mesh, save_hlo=save_hlo)
+    return _finish_record(arch, cfg, shape_name, mesh, core)
+
+
+def dryrun_extrapolated(arch: str, shape_name: str, *, multi_pod: bool = False,
+                        small_mesh: bool = False, overrides: dict | None = None) -> dict:
+    """Roofline mode: unrolled compiles at depth P and 2P (P = pattern
+    period), linear extrapolation of every cost to the full depth."""
+    cfg_full = get_config(arch)
+    if overrides:
+        cfg_full = dataclasses.replace(cfg_full, **overrides)
+    mesh = make_small_mesh() if small_mesh else make_production_mesh(multi_pod=multi_pod)
+    P = cfg_full.pattern_period
+    points = []
+    for mult in (1, 2):
+        L = P * mult
+        cfg = _reduced_depth(cfg_full, L)
+        core = _lower_and_analyze(cfg, shape_name, mesh)
+        points.append((L, core))
+
+    (L1, c1), (L2, c2) = points
+    Lf = cfg_full.num_layers
+
+    def extrap(v1: float, v2: float) -> float:
+        slope = (v2 - v1) / (L2 - L1)
+        return max(v1 + slope * (Lf - L1), 0.0)
+
+    coll = {
+        k: int(extrap(c1["collectives"][k], c2["collectives"][k]))
+        for k in c1["collectives"]
+    }
+    core = {
+        "lower_s": c1["lower_s"] + c2["lower_s"],
+        "compile_s": c1["compile_s"] + c2["compile_s"],
+        "flops": extrap(c1["flops"], c2["flops"]),
+        "hbm_bytes": extrap(c1["hbm_bytes"], c2["hbm_bytes"]),
+        "transcendentals": extrap(c1["transcendentals"], c2["transcendentals"]),
+        "collectives": coll,
+        "memory": {
+            k: (None if c1["memory"][k] is None
+                else int(extrap(c1["memory"][k], c2["memory"][k])))
+            for k in c1["memory"]
+        },
+        "method": f"two-point depth extrapolation (L={L1},{L2} -> {Lf})",
+    }
+    return _finish_record(arch, cfg_full, shape_name, mesh, core)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every combination")
+    ap.add_argument("--multi_pod", action="store_true", help="2x16x16 two-pod mesh")
+    ap.add_argument("--small_mesh", action="store_true",
+                    help="2x4 CI mesh (set REPRO_FAKE_DEVICES=8)")
+    ap.add_argument("--out", default="experiments/dryrun", help="output dir for json records")
+    ap.add_argument("--save_hlo", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scan-over-layers at full depth (slow compiles)")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="roofline mode: two-point depth extrapolation")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VALUE",
+                    help="config override, e.g. --set param_dtype=bfloat16 "
+                         "--set sequence_parallel=true")
+    ap.add_argument("--seq_shard_cache", action="store_true",
+                    help="perf variant: shard unshardable-head KV caches over "
+                         "the sequence axis (flash-decode SP)")
+    ap.add_argument("--repl_params", action="store_true",
+                    help="perf variant: serving layout, params replicated "
+                         "over the data axis")
+    ap.add_argument("--tag", default="", help="suffix for output record names")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+    sharding_specs.SPEC_OPTIONS["seq_shard_cache"] = args.seq_shard_cache
+    sharding_specs.SPEC_OPTIONS["replicate_params_over_data"] = args.repl_params
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = (
+        [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    mesh_tag = "small" if args.small_mesh else ("pod2" if args.multi_pod else "pod1")
+    if args.extrapolate:
+        mesh_tag += "x"
+    elif args.unroll:
+        mesh_tag += "u"
+    if args.tag:
+        mesh_tag += "_" + args.tag
+
+    failures = 0
+    for arch, shape in combos:
+        tag = f"{arch}_{shape}_{mesh_tag}".replace(".", "_").replace("/", "_")
+        out_path = os.path.join(args.out, tag + ".json")
+        if (arch, shape) in SKIPS:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "skip", "reason": SKIPS[(arch, shape)]}
+            print(f"[skip] {arch} x {shape}: {SKIPS[(arch, shape)]}")
+        else:
+            try:
+                if args.extrapolate:
+                    rec = dryrun_extrapolated(
+                        arch, shape, multi_pod=args.multi_pod, small_mesh=args.small_mesh,
+                        overrides=overrides)
+                else:
+                    rec = dryrun_one(
+                        arch, shape, multi_pod=args.multi_pod, small_mesh=args.small_mesh,
+                        save_hlo=os.path.join(args.out, tag + ".hlo") if args.save_hlo else None,
+                        unroll=args.unroll, overrides=overrides,
+                    )
+                rec["overrides"] = overrides
+                rec["spec_options"] = dict(sharding_specs.SPEC_OPTIONS)
+                r = rec["roofline"]
+                print(
+                    f"[ok]   {arch} x {shape} ({mesh_tag}): "
+                    f"comp {r['t_compute_s']:.3e}s mem {r['t_memory_s']:.3e}s "
+                    f"coll {r['t_collective_s']:.3e}s -> {r['dominant']}-bound "
+                    f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+                )
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()}
+                failures += 1
+                print(f"[FAIL] {arch} x {shape}: {type(e).__name__}: {e}")
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""ShapeDtypeStruct stand-ins for every step signature (no device allocation).
+
+``input_specs(arch, shape_name)`` returns the abstract args for the step that
+the given input shape exercises:
+
+* ``train_*``   -> (TrainState, batch)      for the MindTheStep async step
+* ``prefill_*`` -> (params, batch)          for the prefill step
+* ``decode_*`` / ``long_*`` -> (params, cache, token, pos) for serve_step
+
+Everything is built with ``jax.eval_shape`` over the real constructors so the
+abstract pytrees always match the concrete ones.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models import model as M
+from repro.optim import sgd
+from repro.sharding.specs import batch_shape_structs
+from repro.training.steps import init_train_state
+
+__all__ = ["input_specs", "step_for", "specs_for_cfg", "step_for_cfg",
+           "ring_size_for", "cfg_for", "CACHE_DTYPE"]
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def cfg_for(arch: str, *, unroll: bool = False):
+    """Arch config, optionally with scan-over-layers unrolled.
+
+    XLA's ``cost_analysis()`` counts a while-loop body ONCE, not x trip
+    count — scanned stacks underreport FLOPs/bytes/collectives by the layer
+    count.  Roofline dry-runs therefore lower the UNROLLED stack (identical
+    math, per-layer HLO); production training keeps the scan for compile
+    time.  Verified equivalent in tests/test_dryrun_small.py.
+    """
+    import dataclasses
+
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    return cfg
+
+
+def ring_size_for(cfg) -> int:
+    """Delayed-gradient ring depth: enough staleness support for the fitted
+    model, shrunk for very large models so the bf16 ring fits HBM."""
+    params = cfg.param_count()
+    if params > 100e9:
+        return 2
+    if params > 20e9:
+        return 4
+    return 8
+
+
+def _train_specs(cfg, *, batch: int, seq: int):
+    opt = sgd(0.01)
+    K = ring_size_for(cfg)
+    state = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt, async_ring=K)
+    )
+    batch_sds = batch_shape_structs(cfg, batch=batch, seq=seq)
+    return (state, batch_sds)
+
+
+def _prefill_specs(cfg, *, batch: int, seq: int):
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    batch_sds = batch_shape_structs(cfg, batch=batch, seq=seq)
+    return (params, batch_sds)
+
+
+def _decode_specs(cfg, *, batch: int, seq: int):
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    aux_batch = batch_shape_structs(cfg, batch=batch, seq=8)  # enc_embeds only
+    cache = jax.eval_shape(
+        lambda p, b: M.init_decode_state(
+            p, cfg, batch, seq, cache_dtype=CACHE_DTYPE,
+            batch=b if cfg.is_encoder_decoder else None,
+        ),
+        params, aux_batch,
+    )
+    token = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (params, cache, token, pos)
+
+
+def specs_for_cfg(cfg, shape_name: str) -> tuple:
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    builder = {"train": _train_specs, "prefill": _prefill_specs, "decode": _decode_specs}[kind]
+    return builder(cfg, batch=batch, seq=seq)
+
+
+def input_specs(arch: str, shape_name: str, *, unroll: bool = False) -> tuple:
+    return specs_for_cfg(cfg_for(arch, unroll=unroll), shape_name)
+
+
+def step_for_cfg(cfg, shape_name: str, *, alpha_c: float = 0.01):
+    """The concrete step function the dry-run lowers for this combination."""
+    import numpy as np
+
+    from repro.async_engine.delayed import staleness_cdf
+    from repro.core.staleness import Poisson
+    from repro.core.step_size import make_schedule
+    from repro.training.steps import make_async_train_step, make_serve_step
+
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+
+    if kind == "train":
+        # The paper's production configuration: Poisson(m) staleness model,
+        # eq. (17) step size with K=1, ring of delayed gradients.
+        m = 16  # data-parallel groups acting as async workers
+        model = Poisson(float(m))
+        sched = make_schedule("poisson_momentum", alpha_c, model, K=1.0,
+                              tau_max=ring_size_for(cfg) * 4)
+        cdf = staleness_cdf(model.pmf_table(ring_size_for(cfg) - 1))
+        opt = sgd(alpha_c)
+        return make_async_train_step(
+            cfg, opt, jnp.asarray(sched.table, jnp.float32), alpha_c, cdf
+        )
+    if kind == "prefill":
+        # vlm: the vision prefix occupies cache slots ahead of the tokens
+        capacity = seq + (cfg.num_prefix_embeddings if cfg.frontend == "vision" else 0)
+
+        def prefill_step(params, batch_d):
+            logits, cache = M.prefill(params, batch_d, cfg, capacity, cache_dtype=CACHE_DTYPE)
+            return {"logits": logits, "cache": cache}
+
+        return prefill_step
+    # decode
+    return make_serve_step(cfg)
+
+
+def step_for(arch: str, shape_name: str, *, alpha_c: float = 0.01, unroll: bool = False):
+    return step_for_cfg(cfg_for(arch, unroll=unroll), shape_name, alpha_c=alpha_c)

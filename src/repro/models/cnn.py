@@ -1,0 +1,106 @@
+"""The paper's experimental model: a 4-layer CNN for CIFAR-10 (Fig. 1).
+
+Four 3x3 convolutions (32, 32, 64, 64 filters) with MaxPool after each pair,
+then a 256-unit fully-connected layer and a 10-way output.  Cross-entropy
+objective, exactly the Fig. 1 architecture used for the Fig. 3 convergence
+experiments.  Pure jnp (lax.conv_general_dilated), pytree params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params, truncated_normal
+
+__all__ = ["init_cnn", "cnn_forward", "cnn_loss", "init_mlp_classifier", "mlp_forward", "mlp_loss"]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return {
+        "w": truncated_normal(key, (kh, kw, cin, cout), np.sqrt(2.0 / fan_in)),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_cnn(key, *, in_channels: int = 3, num_classes: int = 10, image: int = 32) -> Params:
+    ks = jax.random.split(key, 6)
+    feat = image // 4  # two 2x2 maxpools
+    flat = feat * feat * 64
+    return {
+        "conv1": _conv_init(ks[0], 3, 3, in_channels, 32),
+        "conv2": _conv_init(ks[1], 3, 3, 32, 32),
+        "conv3": _conv_init(ks[2], 3, 3, 32, 64),
+        "conv4": _conv_init(ks[3], 3, 3, 64, 64),
+        "fc1": {
+            "w": truncated_normal(ks[4], (flat, 256), np.sqrt(2.0 / flat)),
+            "b": jnp.zeros((256,), jnp.float32),
+        },
+        "out": {
+            "w": truncated_normal(ks[5], (256, num_classes), np.sqrt(1.0 / 256)),
+            "b": jnp.zeros((num_classes,), jnp.float32),
+        },
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"][None, None, None, :]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params: Params, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = jax.nn.relu(_conv(params["conv1"], images))
+    x = _maxpool(jax.nn.relu(_conv(params["conv2"], x)))
+    x = jax.nn.relu(_conv(params["conv3"], x))
+    x = _maxpool(jax.nn.relu(_conv(params["conv4"], x)))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def cnn_loss(params: Params, batch) -> jnp.ndarray:
+    """Mean cross-entropy — the paper's performance metric (§VI)."""
+    logits = cnn_forward(params, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Small MLP classifier — cheaper stand-in for fast CI convergence runs
+# ---------------------------------------------------------------------------
+
+def init_mlp_classifier(key, *, d_in: int, d_hidden: int = 128, num_classes: int = 10) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": {
+            "w": truncated_normal(k1, (d_in, d_hidden), np.sqrt(2.0 / d_in)),
+            "b": jnp.zeros((d_hidden,), jnp.float32),
+        },
+        "out": {
+            "w": truncated_normal(k2, (d_hidden, num_classes), np.sqrt(1.0 / d_hidden)),
+            "b": jnp.zeros((num_classes,), jnp.float32),
+        },
+    }
+
+
+def mlp_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def mlp_loss(params: Params, batch) -> jnp.ndarray:
+    logits = mlp_forward(params, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1))

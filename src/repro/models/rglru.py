@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (recurrentgemma-9b / Griffin, arXiv:2402.19427).
+
+Griffin's recurrent block:
+
+    x -> norm -> [branch A: linear -> conv1d(k=4) -> RG-LRU]
+              -> [branch B: linear -> GeLU]
+    y = out_proj(A * B)
+
+RG-LRU recurrence (eq. 1–4 of the Griffin paper):
+
+    r_t = sigmoid(W_a u_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)            input gate
+    a_t = a ** (c * r_t),  a = sigmoid(Lambda)   (elementwise, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The sqrt(1-a^2) factor keeps the hidden scale bounded.  Computed in log-space
+(``a_t = exp(c * r_t * log a)``) for stability, as in the reference impl.
+Decode is O(1): carry (conv ring, h).  The Pallas kernel
+(:mod:`repro.kernels.rg_lru`) implements the same chunked recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params, truncated_normal
+from repro.sharding.ctx import shard_activation
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key, cfg) -> Params:
+    d, w, kconv = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    s = 1.0 / np.sqrt(d)
+    # Lambda init so a = sigmoid(Lambda) in [0.9, 0.999]
+    u = np.random.RandomState(1).uniform(0.9, 0.999, size=(w,))
+    lam = np.log(u / (1.0 - u)).astype(np.float32)
+    return {
+        "in_x": truncated_normal(ks[0], (d, w), s, jnp.float32),  # recurrent branch
+        "in_gate": truncated_normal(ks[1], (d, w), s, jnp.float32),  # GeLU branch
+        "conv_w": truncated_normal(ks[2], (kconv, w), 1.0 / np.sqrt(kconv), jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_a": truncated_normal(ks[3], (w, w), 1.0 / np.sqrt(w), jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": truncated_normal(ks[4], (w, w), 1.0 / np.sqrt(w), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lambda_": jnp.asarray(lam),
+        "out_proj": truncated_normal(ks[5], (w, d), 1.0 / np.sqrt(w), jnp.float32),
+    }
+
+
+def _gates(p: Params, u: jnp.ndarray):
+    """u: (B, S, W) -> log_a: (B, S, W) f32, gated input x_t: (B, S, W) f32."""
+    dt = u.dtype
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_a"].astype(dt)).astype(jnp.float32) + p["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_i"].astype(dt)).astype(jnp.float32) + p["b_i"]
+    )
+    log_a = _C * r * jax.nn.log_sigmoid(p["lambda_"])[None, None, :]  # <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * u.astype(jnp.float32))
+    return log_a, x_in
+
+
+def rg_lru_ref(log_a: jnp.ndarray, x_in: jnp.ndarray, h0: jnp.ndarray):
+    """Oracle linear recurrence h_t = exp(log_a_t) h_{t-1} + x_t via lax.scan.
+
+    log_a/x_in: (B, S, W) f32; h0: (B, W).  Returns (ys: (B, S, W), hT).
+    """
+
+    def step(h, xs):
+        la_t, x_t = xs
+        h = jnp.exp(la_t) * h + x_t
+        return h, h
+
+    hT, ys = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2), x_in.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), hT
+
+
+def _conv(u, w, b):
+    K = w.shape[0]
+    upad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(upad[:, k : k + u.shape[1], :] * w[k][None, None, :] for k in range(K))
+    return out + b[None, None, :]
+
+
+def apply_rglru(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full-sequence path.  x: (B, S, D)."""
+    dt = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt)), approximate=True)
+    u = shard_activation(u, ("batch", "seq", "ff"))
+    u = _conv(u, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    log_a, x_in = _gates(p, u)
+    if cfg.use_pallas:
+        from repro.kernels import ON_TPU
+        from repro.kernels.rg_lru.ops import rg_lru as rg_lru_kernel
+
+        ys = rg_lru_kernel(log_a, x_in, interpret=not ON_TPU)
+    else:
+        h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+        ys, _ = rg_lru_ref(log_a, x_in, h0)
+    y = ys.astype(dt) * g
+    return jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(dt))
+
+
+def init_rglru_cache(batch: int, cfg, dtype) -> dict[str, jnp.ndarray]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def apply_rglru_step(p: Params, x: jnp.ndarray, cache, cfg):
+    """x: (B, 1, D) -> (y, new cache)."""
+    dt = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt)), approximate=True)
+    win = jnp.concatenate([cache["conv"], u], axis=1)  # (B, K, W)
+    u_c = jnp.einsum("bkw,kw->bw", win, p["conv_w"].astype(dt))[:, None, :] + p["conv_b"].astype(dt)
+    log_a, x_in = _gates(p, u_c)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + x_in[:, 0]
+    y = h[:, None, :].astype(dt) * g
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(dt))
+    return out, {"conv": win[:, 1:], "h": h}
+
+
+def rglru_prefill_cache(p: Params, x: jnp.ndarray, cfg, dtype):
+    dt = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt)), approximate=True)
+    u_raw = u
+    u = _conv(u, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    log_a, x_in = _gates(p, u)
+    h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    ys, hT = rg_lru_ref(log_a, x_in, h0)
+    y = ys.astype(dt) * g
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(dt))
+    K = cfg.ssm_conv
+    return out, {"conv": u_raw[:, -(K - 1) :, :].astype(dtype), "h": hT}

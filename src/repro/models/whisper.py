@@ -1,0 +1,198 @@
+"""Whisper-large-v3 encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs()`` provides precomputed frame embeddings of shape
+``(batch, encoder_positions, d_model)``.  This module implements the
+transformer backbone that consumes them:
+
+* encoder: ``num_encoder_layers`` bidirectional pre-LN blocks over the frame
+  embeddings (+ fixed sinusoidal positions), final LayerNorm;
+* decoder: causal self-attention (full KV cache for decode) + cross-attention
+  into the encoder memory + MLP, pre-LN, final LayerNorm, tied unembedding.
+
+Whisper uses plain MHA (kv_heads == heads), LayerNorm, non-gated GeLU MLPs and
+absolute sinusoidal positions (no RoPE).  All of that comes straight from the
+config flags (``norm_type="layernorm"``, ``gated_mlp=False``,
+``use_rope=False``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.layers import (
+    LayerIO,
+    Params,
+    apply_layernorm,
+    apply_mlp,
+    init_layernorm,
+    init_mlp,
+    sinusoidal_positions,
+)
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_encoder_block(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_layernorm(cfg.d_model),
+        "attn": A.init_attention(k1, cfg, cross=True),  # MHA: kv == q heads
+        "mlp_norm": init_layernorm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def apply_encoder_block(p: Params, x: jnp.ndarray, io: LayerIO, cfg) -> jnp.ndarray:
+    h = apply_layernorm(p["attn_norm"], x, cfg.norm_eps)
+    h = A.attention_layer(p["attn"], h, io, cfg, window=None, use_rope=False)
+    x = x + h
+    m = apply_layernorm(p["mlp_norm"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], m, cfg.act)
+
+
+def init_decoder_block(key, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": init_layernorm(cfg.d_model),
+        "self_attn": A.init_attention(k1, cfg),
+        "cross_norm": init_layernorm(cfg.d_model),
+        "cross_attn": A.init_attention(k2, cfg, cross=True),
+        "mlp_norm": init_layernorm(cfg.d_model),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def apply_decoder_block(p: Params, x: jnp.ndarray, memory: jnp.ndarray, io: LayerIO, cfg):
+    h = apply_layernorm(p["self_norm"], x, cfg.norm_eps)
+    h = A.attention_layer(p["self_attn"], h, io, cfg, window=None, use_rope=False)
+    x = x + h
+    c = apply_layernorm(p["cross_norm"], x, cfg.norm_eps)
+    c = A.attention_layer(p["cross_attn"], c, io, cfg, window=None, kv_source=memory, use_rope=False)
+    x = x + c
+    m = apply_layernorm(p["mlp_norm"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], m, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over identical layers, params stacked on the leading axis)
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_one):
+    layers = [init_one(k) for k in jax.random.split(key, n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_whisper(key, cfg) -> Params:
+    ke, kd, kemb = jax.random.split(key, 3)
+    from repro.models.layers import init_embedding
+
+    return {
+        "embed": init_embedding(kemb, cfg.vocab_size, cfg.d_model),
+        "encoder": _stack_init(ke, cfg.num_encoder_layers, lambda k: init_encoder_block(k, cfg)),
+        "encoder_norm": init_layernorm(cfg.d_model),
+        "decoder": _stack_init(kd, cfg.num_layers, lambda k: init_decoder_block(k, cfg)),
+        "decoder_norm": init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params: Params, frame_embeds: jnp.ndarray, cfg) -> jnp.ndarray:
+    """frame_embeds: (B, T_enc, D) conv-frontend stub output -> encoder memory."""
+    B, T, D = frame_embeds.shape
+    pos_table = jnp.asarray(sinusoidal_positions(T, D), frame_embeds.dtype)
+    x = frame_embeds + pos_table[None]
+    io = LayerIO(positions=jnp.broadcast_to(jnp.arange(T)[None], (B, T)), causal=False)
+
+    def layer(x, p):
+        return apply_encoder_block(p, x, io, cfg), None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"])
+    return apply_layernorm(params["encoder_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params: Params, tokens: jnp.ndarray, memory: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Teacher-forced decoder pass. tokens: (B, S) -> logits (B, S, V)."""
+    from repro.models.layers import apply_embedding, apply_unembed, dtype_of
+
+    B, S = tokens.shape
+    act_dt = dtype_of(cfg.activation_dtype)
+    x = apply_embedding(params["embed"], tokens, scale=False, act_dtype=act_dt)
+    pos_table = jnp.asarray(sinusoidal_positions(S, cfg.d_model), act_dt)
+    x = x + pos_table[None]
+    io = LayerIO(positions=jnp.broadcast_to(jnp.arange(S)[None], (B, S)), causal=True)
+    mem = memory.astype(act_dt)
+
+    def layer(x, p):
+        return apply_decoder_block(p, x, mem, io, cfg), None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = apply_layernorm(params["decoder_norm"], x, cfg.norm_eps)
+    return apply_unembed(params["embed"], x, softcap=cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) — cache = self-attn KV per layer + projected cross KV
+# ---------------------------------------------------------------------------
+
+def init_whisper_cache(params: Params, memory: jnp.ndarray, cfg, capacity: int, dtype) -> Params:
+    """Self-attn KV cache (empty) + cross-attn K/V projected once from memory."""
+    B = memory.shape[0]
+    L = cfg.num_layers
+
+    def cross_kv(p_cross, mem):
+        k = jnp.einsum("btd,dnh->btnh", mem, p_cross["wk"].astype(mem.dtype))
+        v = jnp.einsum("btd,dnh->btnh", mem, p_cross["wv"].astype(mem.dtype))
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    cross = jax.vmap(lambda p: cross_kv(p, memory))(params["decoder"]["cross_attn"])
+    one = A.init_kv_cache(B, capacity, cfg.num_heads, cfg.head_dim, dtype)
+    self_kv = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (L,) + l.shape), one)
+    return {"self": self_kv, "cross": cross}
+
+
+def whisper_decode_step(params: Params, cache: Params, token: jnp.ndarray, pos, cfg):
+    """token: (B,) int32, pos: scalar -> (logits (B, V), new cache)."""
+    from repro.models.layers import apply_embedding, apply_unembed, dtype_of
+
+    act_dt = dtype_of(cfg.activation_dtype)
+    B = token.shape[0]
+    x = apply_embedding(params["embed"], token[:, None], scale=False, act_dtype=act_dt)
+    cap = cache["self"]["k"].shape[2]
+    # absolute sinusoidal position for the current token
+    pos_row = jnp.asarray(sinusoidal_positions(cap, cfg.d_model), act_dt)[pos]
+    x = x + pos_row[None, None, :]
+    qpos = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+
+    def layer(x, xs):
+        p, self_kv, cross_kv = xs
+        h = apply_layernorm(p["self_norm"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dnh->bsnh", h, p["self_attn"]["wq"].astype(act_dt))
+        k = jnp.einsum("bsd,dnh->bsnh", h, p["self_attn"]["wk"].astype(act_dt))
+        v = jnp.einsum("bsd,dnh->bsnh", h, p["self_attn"]["wv"].astype(act_dt))
+        q = q * jnp.asarray(cfg.head_dim**-0.5, act_dt)
+        self_kv = A.update_cache_full(self_kv, k, v, pos)
+        cpos = A.cache_positions_full(cap, pos + 1, B)
+        o = A.decode_attention(q, self_kv["k"], self_kv["v"], cpos, qpos)
+        x = x + jnp.einsum("bsnh,nhd->bsd", o, p["self_attn"]["wo"].astype(act_dt))
+
+        c = apply_layernorm(p["cross_norm"], x, cfg.norm_eps)
+        qc = jnp.einsum("bsd,dnh->bsnh", c, p["cross_attn"]["wq"].astype(act_dt))
+        qc = qc * jnp.asarray(cfg.head_dim**-0.5, act_dt)
+        T = cross_kv["k"].shape[1]
+        mpos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        # cross attention is non-causal: query pos >= any memory pos
+        oc = A.decode_attention(qc, cross_kv["k"], cross_kv["v"], mpos, mpos[:, -1:] + 1)
+        x = x + jnp.einsum("bsnh,nhd->bsd", oc, p["cross_attn"]["wo"].astype(act_dt))
+
+        m = apply_layernorm(p["mlp_norm"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], m, cfg.act)
+        return x, self_kv
+
+    x, new_self = jax.lax.scan(layer, x, (params["decoder"], cache["self"], cache["cross"]))
+    x = apply_layernorm(params["decoder_norm"], x, cfg.norm_eps)
+    logits = apply_unembed(params["embed"], x[:, 0], softcap=cfg.final_logit_softcap)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,22 @@
+from repro.optim.base import (
+    Optimizer,
+    adam,
+    momentum,
+    sgd,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.mindthestep import MindTheStep, mindthestep
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "MindTheStep",
+    "mindthestep",
+]

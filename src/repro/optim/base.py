@@ -1,0 +1,129 @@
+"""Optimizer substrate: pure pytree transforms, no external deps.
+
+An :class:`Optimizer` is an (init, update) pair over parameter pytrees:
+
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params, scale=s)
+
+``scale`` is a (possibly traced) multiplier on the learning rate — this is the
+seam MindTheStep plugs into: the staleness-adaptive factor ``alpha(tau)/alpha``
+multiplies the base step without the optimizer knowing about staleness.
+
+Optimizer state is sharded like the parameters it mirrors (the tree structure
+is identical), so under pjit the FSDP-style parameter sharding carries over
+for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]  # (grads, state, params, scale=1.0)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    n = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda l: l * factor.astype(l.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float) -> Optimizer:
+    """Plain SGD — the paper's eq. (1)/(4) update: ``x <- x - alpha g``."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, scale=1.0):
+        step = jnp.asarray(lr) * scale
+        new = jax.tree.map(lambda p, g: p - (step * g.astype(jnp.float32)).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Momentum (Polyak heavy ball, eq. 5 of the paper)
+# ---------------------------------------------------------------------------
+
+def momentum(lr: float, mu: float = 0.9) -> Optimizer:
+    """``v <- mu v - alpha g;  x <- x + v`` — the explicit-momentum baseline
+    the paper's implicit asynchrony-induced momentum is compared against."""
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(grads, state, params, scale=1.0):
+        step = jnp.asarray(lr) * scale
+        v = jax.tree.map(lambda v, g: mu * v - step * g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(lambda p, v: (p.astype(jnp.float32) + v).astype(p.dtype), params, v)
+        return new, v
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, scale=1.0):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        tf = t.astype(jnp.float32)
+        mhat_c = 1.0 / (1.0 - b1**tf)
+        vhat_c = 1.0 / (1.0 - b2**tf)
+        step = jnp.asarray(lr) * scale
+        new = jax.tree.map(
+            lambda p, m, v: (
+                p.astype(jnp.float32) - step * (m * mhat_c) / (jnp.sqrt(v * vhat_c) + eps)
+            ).astype(p.dtype),
+            params, m, v,
+        )
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,83 @@
+"""MindTheStep: the paper's contribution as a first-class optimizer wrapper.
+
+Algorithm 1 of the paper: the parameter server applies each incoming gradient
+with a *staleness-adaptive* step ``x <- x - alpha(tau) g``.  Here the server
+update point is the post-psum optimizer application, and the wrapper is
+
+    mts = mindthestep(base_optimizer, schedule, alpha_c)
+    new_params, state = mts.update(grads, state, params, tau=tau)
+
+``schedule`` is a :class:`repro.core.step_size.StepSizeSchedule` table built
+from any of the paper's strategies (Thm 3/4/5, Cor 1/2) — the gather
+``schedule(tau)`` happens inside jit, so ``tau`` may be a traced per-step
+staleness observation.  The base optimizer sees ``scale = alpha(tau)/alpha_c``
+and stays oblivious to asynchrony, exactly the framework's "modularized
+alpha" design (§IV.A).
+
+The wrapper also exposes the online-estimation hook: ``observe(tau)`` feeds
+the host-side histogram and ``refresh()`` refits the staleness model and
+rebuilds the table (the jit side only ever sees a fresh table array via
+``donate``-free closure swap — tables are tiny).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import OnlineStalenessEstimator
+from repro.core.step_size import StepSizeSchedule
+from repro.optim.base import Optimizer
+
+__all__ = ["MindTheStep", "mindthestep"]
+
+
+@dataclasses.dataclass
+class MindTheStep:
+    """Staleness-adaptive wrapper around any base :class:`Optimizer`."""
+
+    base: Optimizer
+    schedule: StepSizeSchedule
+    alpha_c: float
+    estimator: OnlineStalenessEstimator | None = None
+
+    # -- Optimizer interface -------------------------------------------------
+    def init(self, params):
+        return self.base.init(params)
+
+    def update(self, grads, state, params, tau=0, scale=1.0):
+        """Apply gradient with step ``alpha(tau)`` (times any extra ``scale``)."""
+        factor = self.schedule(tau) / jnp.float32(self.alpha_c)
+        return self.base.update(grads, state, params, scale=factor * scale)
+
+    def table(self) -> jnp.ndarray:
+        return jnp.asarray(self.schedule.table, jnp.float32)
+
+    # -- Online adaptation (host side, between steps) ------------------------
+    def observe(self, tau) -> None:
+        if self.estimator is not None:
+            self.estimator.observe(np.asarray(tau))
+
+    def refresh(self, strategy: str = "poisson_momentum", *, family: str = "poisson",
+                K: float = 1.0, normalize: bool = True) -> None:
+        """Refit the staleness model from observations and rebuild alpha(tau)."""
+        assert self.estimator is not None, "construct with an estimator to refresh"
+        self.schedule = self.estimator.rebuild_schedule(
+            strategy, self.alpha_c, family=family, K=K, normalize=normalize
+        )
+
+
+def mindthestep(
+    base: Optimizer,
+    schedule: StepSizeSchedule,
+    alpha_c: float,
+    *,
+    m: int | None = None,
+    tau_max: int = 256,
+) -> MindTheStep:
+    """Build the wrapper; pass ``m`` to enable online estimation (paper §IV)."""
+    est = OnlineStalenessEstimator(m=m, tau_max=tau_max) if m is not None else None
+    return MindTheStep(base=base, schedule=schedule, alpha_c=alpha_c, estimator=est)

@@ -1,0 +1,7 @@
+from repro.sharding.ctx import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingRules,
+    current_rules,
+    shard_activation,
+    use_sharding_rules,
+)

@@ -1,0 +1,276 @@
+"""Parameter / state / batch PartitionSpec assignment (2-D data x model).
+
+Megatron-style tensor parallelism over ``model`` + FSDP-style storage
+sharding over ``data`` (and ``pod`` when present):
+
+* attention projections shard heads over ``model``, d_model over ``data``;
+* MLP shards d_ff over ``model``; MoE shards the expert axis over ``model``
+  (expert parallelism — the all-to-all pattern);
+* embedding/unembedding shards vocab over ``model``;
+* SSM / RG-LRU shard the inner width over ``model``;
+* norm scales and other small vectors replicate.
+
+Rules are keyed on the *last* dims of each leaf (by its dict path), so the
+scan-over-layers leading period axis is transparently padded with ``None``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_spec_for",
+    "tree_specs",
+    "tree_shardings",
+    "batch_shape_structs",
+    "batch_specs",
+    "SPEC_OPTIONS",
+]
+
+# Perf-variant switches (set by the dry-run driver; see EXPERIMENTS.md §Perf).
+SPEC_OPTIONS = {
+    # Decode caches whose kv-head axis cannot shard over `model` normally
+    # replicate — this instead shards the cache *capacity* (sequence) axis
+    # over `model`; XLA turns the softmax reductions into tiny all-reduces
+    # (flash-decode style sequence parallelism).
+    "seq_shard_cache": False,
+    # Serving layout: keep parameters sharded over `model` only (replicated
+    # over `data`), removing the per-token weight all-gather of the FSDP
+    # storage sharding.  Only valid when params/|model| fits HBM.
+    "replicate_params_over_data": False,
+}
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _data_axes(mesh: Mesh):
+    present = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return present if present else None
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    sizes = _axis_sizes(mesh)
+    if isinstance(axes, tuple):
+        n = int(np.prod([sizes[a] for a in axes]))
+    else:
+        n = sizes[axes]
+    return dim % n == 0
+
+
+# (path regex, trailing spec) — first match wins.  The spec applies to the
+# LAST len(spec) dims; leading dims (scan stacking) get None.
+_RULES: list[tuple[str, tuple]] = [
+    # attention: wq/wk/wv (d, heads, hd); wo (heads, hd, d)
+    (r"(wq|wk|wv)$", ("data", "model", None)),
+    (r"wo$", ("model", None, "data")),
+    # MoE expert stacks: experts over model, d_ff over data (the f-axis
+    # storage sharding matches the weights-stationary decode path)
+    (r"w_(gate|up)_e$", ("model", None, "data")),  # (E, d, f)
+    (r"w_down_e$", ("model", "data", None)),  # (E, f, d)
+    (r"router$", ("data", None)),
+    # dense MLP (d, f) / (f, d)
+    (r"w_(gate|up)$", ("data", "model")),
+    (r"w_down$", ("model", "data")),
+    # embedding (vocab, d)
+    (r"embedding$", ("model", "data")),
+    # mamba: in_proj (d, 2di); out_proj (di, d); x_proj (di, k); dt_proj (r, di)
+    (r"in_proj$", ("data", "model")),
+    (r"out_proj$", ("model", "data")),
+    (r"x_proj$", ("model", None)),
+    (r"dt_proj$", (None, "model")),
+    (r"a_log$", ("model", None)),
+    (r"(d_skip|dt_bias)$", ("model",)),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    # rg-lru: in_x/in_gate (d, w); w_a/w_i (w, w); gates (w,)
+    (r"(in_x|in_gate)$", ("data", "model")),
+    (r"(w_a|w_i)$", (None, "model")),
+    (r"(b_a|b_i|lambda_)$", ("model",)),
+    # shared-expert gate (d, 1)
+    (r"gate_proj$", (None, None)),
+    # norms and everything small: replicate
+    (r"(scale|bias)$", None),
+]
+
+
+def _resolve(axis, mesh: Mesh, dim: int):
+    if axis is None:
+        return None
+    if axis == "data":
+        if SPEC_OPTIONS["replicate_params_over_data"]:
+            return None
+        axes = _data_axes(mesh)
+        return axes if axes is not None and _fits(dim, mesh, axes) else None
+    if axis in mesh.axis_names and _fits(dim, mesh, axis):
+        return axis
+    return None
+
+
+def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, by its tree path + shape."""
+    for pattern, trailing in _RULES:
+        if re.search(pattern, path):
+            if trailing is None:
+                return P()
+            n = len(trailing)
+            if len(shape) < n:
+                return P()
+            lead = (None,) * (len(shape) - n)
+            tail = tuple(
+                _resolve(ax, mesh, shape[len(shape) - n + i]) for i, ax in enumerate(trailing)
+            )
+            return P(*(lead + tail))
+    # default: replicate (small/unknown leaves)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def tree_specs(tree: Any, mesh: Mesh) -> Any:
+    """Map every array leaf to its PartitionSpec (same tree structure)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec_for(_path_str(path), tuple(leaf.shape), mesh), tree
+    )
+
+
+def tree_shardings(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), tree_specs(tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_shape_structs(cfg, *, batch: int, seq: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a training/prefill batch (no allocation)."""
+    import jax.numpy as jnp
+
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_embeddings, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_positions, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def batch_specs(cfg, mesh: Mesh, *, batch: int) -> dict[str, P]:
+    """Batch sharding: leading batch dim over (pod, data) when divisible."""
+    daxes = _data_axes(mesh)
+    b_ax = daxes if daxes is not None and _fits(batch, mesh, daxes) else None
+    spec2 = P(b_ax, None)
+    spec3 = P(b_ax, None, None)
+    out = {"tokens": spec2, "labels": spec2}
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = spec3
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = spec3
+    return out
+
+
+def cache_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh, batch: int) -> P:
+    """Decode-cache leaf sharding.
+
+    KV caches (..., B, C, n_kv, hd): batch over data, kv heads over model.
+    Conv rings (..., B, K, W) and recurrent states (..., B, W) / (..., B, W, N):
+    batch over data, width over model.
+    """
+    daxes = _data_axes(mesh)
+    b_ax = daxes if daxes is not None and _fits(batch, mesh, daxes) else None
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("k", "v"):
+        head_ax = _resolve("model", mesh, shape[-2])
+        if head_ax is None and SPEC_OPTIONS["seq_shard_cache"]:
+            # kv heads unshardable -> shard the sequence/capacity axis instead
+            tail = (b_ax, _resolve("model", mesh, shape[-3]), None, None)
+        elif b_ax is None and SPEC_OPTIONS["seq_shard_cache"]:
+            # batch=1 (latency shape): the data axis idles -> put the cache
+            # capacity on it (heads stay on model)
+            daxes = _data_axes(mesh)
+            cap_ax = daxes if daxes is not None and _fits(shape[-3], mesh, daxes) else None
+            tail = (None, cap_ax, head_ax, None)
+        else:
+            tail = (b_ax, None, head_ax, None)
+    elif leaf == "conv":
+        tail = (b_ax, None, _resolve("model", mesh, shape[-1]))
+    elif leaf == "h":
+        if len(shape) >= 3 and shape[-1] <= 64:  # ssm state (B, Di, N)
+            tail = (b_ax, _resolve("model", mesh, shape[-2]), None)
+        else:  # rg-lru state (B, W)
+            tail = (b_ax, _resolve("model", mesh, shape[-1]))
+    else:
+        return P()
+    lead = (None,) * (len(shape) - len(tail))
+    return P(*(lead + tail))
+
+
+def cache_specs(tree: Any, mesh: Mesh, batch: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec_for(_path_str(path), tuple(leaf.shape), mesh, batch), tree
+    )
+
+
+def cache_shardings(tree: Any, mesh: Mesh, batch: int) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), cache_specs(tree, mesh, batch))
+
+
+# ---------------------------------------------------------------------------
+# Unified auto-sharding for whole step signatures (params + caches + batches)
+# ---------------------------------------------------------------------------
+
+def auto_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh, batch: int) -> P:
+    """Resolve a spec for ANY leaf of a step's input/output pytree:
+    cache leaves by name (k/v/conv/h), token/logit tensors by name, parameter
+    leaves by the Megatron/FSDP rules, everything else replicated."""
+    daxes = _data_axes(mesh)
+    b_ax = daxes if daxes is not None and _fits(batch, mesh, daxes) else None
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("k", "v", "conv", "h") and len(shape) >= 2:
+        return cache_spec_for(path, shape, mesh, batch)
+    if leaf == "logits" and len(shape) >= 2:
+        lead = (None,) * (len(shape) - 2)
+        return P(*(lead + (b_ax, _resolve("model", mesh, shape[-1]))))
+    if leaf == "next_token" and len(shape) == 1:
+        return P(b_ax)
+    if leaf in ("tokens", "labels") and len(shape) == 2:
+        return P(b_ax, None)
+    if leaf in ("prefix_embeds", "enc_embeds") and len(shape) == 3:
+        return P(b_ax, None, None)
+    return param_spec_for(path, shape, mesh)
+
+
+def auto_specs(tree: Any, mesh: Mesh, batch: int) -> Any:
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        return auto_spec_for(_path_str(path), shape, mesh, batch)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def auto_shardings(tree: Any, mesh: Mesh, batch: int) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), auto_specs(tree, mesh, batch))

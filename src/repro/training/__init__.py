@@ -1,0 +1,17 @@
+from repro.training.steps import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_async_train_step,
+    make_serve_step,
+)
+from repro.training.loop import train_loop
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_async_train_step",
+    "make_serve_step",
+    "train_loop",
+]

@@ -1,0 +1,59 @@
+"""Host-side training loop with online staleness adaptation.
+
+The loop owns the non-jit concerns: stepping the data iterator, feeding
+observed staleness back into the :class:`OnlineStalenessEstimator`, rebuilding
+the ``alpha(tau)`` table every ``refresh_every`` steps (the paper's
+online-fashion adaptation), metric aggregation and checkpointing.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["train_loop"]
+
+
+def train_loop(
+    step_fn: Callable,
+    state,
+    batches: Iterable[Any],
+    *,
+    num_steps: int,
+    estimator=None,
+    mts=None,
+    refresh_every: int = 0,
+    log_every: int = 50,
+    logger: Callable[[str], None] = print,
+    checkpoint_fn: Callable[[Any, int], None] | None = None,
+    checkpoint_every: int = 0,
+) -> tuple[Any, list[dict]]:
+    """Run ``num_steps`` of ``step_fn`` over ``batches``; returns (state, history)."""
+    history: list[dict] = []
+    jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
+    t0 = time.perf_counter()
+    it = iter(batches)
+
+    for i in range(num_steps):
+        batch = next(it)
+        state, metrics = jitted(state, batch)
+        if estimator is not None and "tau" in metrics:
+            estimator.observe(int(metrics["tau"]))
+        if mts is not None and refresh_every and (i + 1) % refresh_every == 0:
+            mts.refresh()
+        if (i + 1) % log_every == 0 or i == num_steps - 1:
+            host = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            host["step"] = i + 1
+            host["wall_s"] = time.perf_counter() - t0
+            history.append(host)
+            logger(
+                f"step {i + 1:6d}  loss {host.get('loss', float('nan')):.4f}  "
+                f"({host['wall_s']:.1f}s)"
+            )
+        if checkpoint_fn is not None and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            checkpoint_fn(state, i + 1)
+    return state, history

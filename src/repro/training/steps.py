@@ -1,0 +1,161 @@
+"""Train / serve step factories — the jit boundaries of the framework.
+
+Three step kinds:
+
+* ``make_train_step``       — synchronous data-parallel step (the SyncPSGD
+  baseline of paper §III; on the mesh, the batch axis IS the worker axis and
+  Theorem 1's effective batch is explicit).
+* ``make_async_train_step`` — MindTheStep-AsyncPSGD on the mesh: gradient
+  pushed into the delayed ring, a tau-stale gradient popped and applied with
+  ``alpha(tau)`` (paper eq. 4 + Algorithm 1, async-as-delay adaptation).
+* ``make_serve_step``       — one decode step against a KV cache (inference
+  shapes ``decode_32k`` / ``long_500k``).
+
+Each factory returns a pure function suitable for ``jax.jit`` with explicit
+in/out shardings supplied by the launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.async_engine.delayed import DelayedGradients, delayed_apply, init_delayed, sample_tau
+from repro.models import model as M
+from repro.optim.base import Optimizer
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_async_train_step",
+    "make_serve_step",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    rng: jax.Array
+    delayed: DelayedGradients | None = None
+
+
+def init_train_state(
+    key: jax.Array,
+    cfg,
+    opt: Optimizer,
+    *,
+    async_ring: int = 0,
+    params: Any | None = None,
+) -> TrainState:
+    kp, kr = jax.random.split(key)
+    if params is None:
+        params = M.init_model(kp, cfg)
+    if cfg.param_dtype != "float32":
+        # low-precision parameter storage (halves weight HBM traffic; the
+        # optimizer update still accumulates in f32 before the cast back)
+        from repro.models.layers import dtype_of
+
+        pd = dtype_of(cfg.param_dtype)
+        params = jax.tree.map(
+            lambda p: p.astype(pd) if p.dtype == jnp.float32 else p, params
+        )
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        step=jnp.zeros((), jnp.int32),
+        rng=kr,
+        delayed=init_delayed(params, async_ring) if async_ring else None,
+    )
+
+
+def _constrain_grads(grads, cfg):
+    """FSDP-style: pin each weight gradient to its parameter's sharding so
+    XLA reduce-scatters partial grads instead of all-reducing them replicated
+    (cfg.shard_grads; no-op without an active mesh)."""
+    if not cfg.shard_grads:
+        return grads
+    from repro.sharding.ctx import current_rules
+    from repro.sharding.specs import tree_shardings
+
+    rules = current_rules()
+    if rules is None:
+        return grads
+    shardings = tree_shardings(grads, rules.mesh)
+    return jax.tree.map(jax.lax.with_sharding_constraint, grads, shardings)
+
+
+def make_train_step(cfg, opt: Optimizer) -> Callable:
+    """Synchronous step: loss -> grad -> optimizer. Batch is globally sharded
+    over (pod, data); XLA inserts the gradient all-reduce."""
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        def lf(p):
+            return M.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        grads = _constrain_grads(grads, cfg)
+        new_params, new_opt = opt.update(grads, state.opt_state, state.params)
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt, step=state.step + 1,
+            rng=state.rng, delayed=state.delayed,
+        )
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_async_train_step(
+    cfg,
+    opt: Optimizer,
+    alpha_table: jnp.ndarray,  # (tau_max+1,) — the MindTheStep schedule
+    alpha_c: float,
+    tau_cdf: jnp.ndarray,  # inverse-CDF table of the fitted staleness model
+) -> Callable:
+    """MindTheStep-AsyncPSGD step (async-as-delay on the mesh).
+
+    Per step: compute the gradient at the current params, push to the ring,
+    pop the gradient from ``tau ~ fitted model`` steps ago, and apply it with
+    step size ``alpha(tau)`` (zero while the ring warms up — the paper's
+    drop rule).  Returns tau in the metrics so the host-side estimator can
+    ``observe()`` and periodically ``refresh()`` the schedule.
+    """
+    tau_max = alpha_table.shape[0] - 1
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        def lf(p):
+            return M.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        grads = _constrain_grads(grads, cfg)
+        rng, sub = jax.random.split(state.rng)
+        tau = sample_tau(sub, tau_cdf)
+        delayed_grad, live, new_ring = delayed_apply(state.delayed, grads, tau)
+        alpha = alpha_table[jnp.clip(tau, 0, tau_max)]
+        scale = (alpha / jnp.float32(alpha_c)) * live
+        new_params, new_opt = opt.update(delayed_grad, state.opt_state, state.params, scale=scale)
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt, step=state.step + 1,
+            rng=rng, delayed=new_ring,
+        )
+        return new_state, {"loss": loss, "tau": tau, "alpha": alpha, "live": live, **metrics}
+
+    return train_step
+
+
+def make_serve_step(cfg) -> Callable:
+    """One batched greedy decode step: (params, cache, token, pos) ->
+    (next_token, logits, cache)."""
+
+    def serve_step(params, cache, token: jnp.ndarray, pos):
+        logits, new_cache = M.decode_step(params, cache, token, pos, cfg)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"next_token": next_token, "logits": logits, "cache": new_cache}
+
+    return serve_step

@@ -1,0 +1,230 @@
+"""Async engine: event sim regimes, exact simulator semantics, delayed ring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.async_engine import (
+    EventSimConfig,
+    simulate_staleness_trace,
+    simulate_async_sgd,
+    uniform_commit_order,
+    init_delayed,
+    delayed_apply,
+    sample_tau,
+)
+from repro.async_engine.delayed import staleness_cdf
+from repro.core import staleness as S
+from repro.core import step_size as SS
+
+
+class TestEventSim:
+    """The paper's tau = tau_C + tau_S regimes (Fig 2 narrative)."""
+
+    def test_dl_regime_poisson_beats_geometric(self):
+        cfg = EventSimConfig(m=8, compute_mean=1.0, apply_mean=0.02)
+        taus = simulate_staleness_trace(cfg, 20000, seed=1)
+        fits = S.fit_all_models(taus, m=8)
+        assert fits["Poisson"][1] < fits["Geometric"][1]
+        assert fits["CMP"][1] < fits["Geometric"][1]
+
+    def test_dl_regime_mode_near_m_minus_1(self):
+        cfg = EventSimConfig(m=12, compute_mean=1.0, apply_mean=0.01)
+        taus = simulate_staleness_trace(cfg, 20000, seed=2)
+        mode = int(np.bincount(taus).argmax())
+        assert abs(mode - 11) <= 1
+
+    def test_ps_regime_geometric_wins(self):
+        cfg = EventSimConfig(m=8, compute_mean=0.01, apply_mean=1.0)
+        taus = simulate_staleness_trace(cfg, 20000, seed=1)
+        fits = S.fit_all_models(taus, m=8)
+        assert fits["Geometric"][1] < fits["Poisson"][1]
+
+    def test_deterministic_given_seed(self):
+        cfg = EventSimConfig(m=4)
+        a = simulate_staleness_trace(cfg, 500, seed=7)
+        b = simulate_staleness_trace(cfg, 500, seed=7)
+        np.testing.assert_array_equal(a, b)
+
+    def test_poisson_lambda_tracks_m(self):
+        """Table I: the fitted Poisson lambda scales with the worker count
+        (lambda ~ m-1: each gradient sees the other m-1 workers commit once
+        during its own computation)."""
+        for m in (4, 16):
+            cfg = EventSimConfig(m=m, compute_mean=1.0, apply_mean=0.01)
+            taus = simulate_staleness_trace(cfg, 30000, seed=3)
+            lam = S.Poisson.fit_mle(taus).lam
+            assert lam == pytest.approx(m - 1, rel=0.2)
+
+
+def _quadratic_loss(x, batch):
+    return 0.5 * jnp.sum((x - batch) ** 2)
+
+
+class TestExactSimulator:
+    def test_m1_equals_sequential_sgd(self, key):
+        """With one worker the async simulator IS sequential SGD (tau==0)."""
+        d, T = 4, 50
+        x0 = jnp.ones((d,))
+        batches = 0.1 * jax.random.normal(key, (T, d))
+        order = np.zeros(T, dtype=np.int32)
+        tab = jnp.full((8,), 0.1, jnp.float32)
+        tr = simulate_async_sgd(_quadratic_loss, x0, batches, order, tab, m=1)
+        assert int(tr.taus.max()) == 0
+        # replay sequentially
+        x = x0
+        for t in range(T):
+            g = jax.grad(_quadratic_loss)(x, batches[t])
+            x = x - 0.1 * g
+        np.testing.assert_allclose(np.asarray(tr.params), np.asarray(x), rtol=1e-6)
+
+    def test_staleness_bookkeeping_uniform_scheduler(self, key):
+        """Uniform scheduler + instant compute: E[tau] = m-1 (each worker
+        sees on average m-1 interleaved commits between its own)."""
+        m, T = 8, 4000
+        x0 = jnp.zeros((4,))
+        batches = jnp.zeros((T, 4))
+        order = uniform_commit_order(T, m, seed=0)
+        tab = jnp.zeros((64,), jnp.float32)  # no movement; just bookkeeping
+        tr = simulate_async_sgd(_quadratic_loss, x0, batches, order, tab, m=m)
+        taus = np.asarray(tr.taus[m * 4:])  # skip warmup
+        assert taus.mean() == pytest.approx(m - 1, rel=0.1)
+
+    def test_convergence_on_quadratic(self, key):
+        d, m, T = 8, 4, 800
+        x0 = jnp.ones((d,)) * 3.0
+        batches = 0.05 * jax.random.normal(key, (T, d))
+        order = uniform_commit_order(T, m, seed=1)
+        tab = jnp.full((64,), 0.05, jnp.float32)
+        tr = simulate_async_sgd(_quadratic_loss, x0, batches, order, tab, m=m)
+        assert float(tr.losses[-1]) < float(tr.losses[0]) / 10
+
+    def test_alpha_applied_by_tau(self, key):
+        """The recorded alpha matches table[tau] for every commit."""
+        m, T = 4, 200
+        x0 = jnp.zeros((2,))
+        batches = jax.random.normal(key, (T, 2)) * 0.01
+        order = uniform_commit_order(T, m, seed=2)
+        tab = jnp.asarray(np.linspace(0.1, 0.0, 32), jnp.float32)
+        tr = simulate_async_sgd(_quadratic_loss, x0, batches, order, tab, m=m)
+        taus = np.clip(np.asarray(tr.taus), 0, 31)
+        np.testing.assert_allclose(np.asarray(tr.alphas), np.asarray(tab)[taus], rtol=1e-6)
+
+
+class TestDelayedRing:
+    def test_fifo_semantics(self):
+        params = {"w": jnp.zeros((3,))}
+        st = init_delayed(params, K=4, dtype=jnp.float32)
+        grads = [{"w": jnp.full((3,), float(i + 1))} for i in range(6)]
+        # push g1..g6 popping tau=2 behind
+        outs = []
+        for g in grads:
+            d, live, st = delayed_apply(st, g, jnp.int32(2))
+            outs.append((float(d["w"][0]), float(live)))
+        # step t pops gradient from step t-2: live only from t=2
+        assert outs[0][1] == 0.0 and outs[1][1] == 0.0
+        assert outs[2] == (1.0, 1.0)
+        assert outs[5] == (4.0, 1.0)
+
+    def test_tau_at_least_ring_drops(self):
+        params = {"w": jnp.zeros((2,))}
+        st = init_delayed(params, K=4, dtype=jnp.float32)
+        for i in range(5):
+            _, live, st = delayed_apply(st, {"w": jnp.ones((2,))}, jnp.int32(4))
+            assert float(live) == 0.0
+
+    @given(
+        K=st.integers(2, 12),
+        taus=st.lists(st.integers(0, 15), min_size=1, max_size=40),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_ring_matches_python_reference(self, K, taus):
+        """Property: for any tau sequence, the ring pops gradient t - tau
+        (when 0 <= t - tau and tau < K), else live == 0."""
+        params = {"w": jnp.zeros((1,))}
+        st_ring = init_delayed(params, K=K, dtype=jnp.float32)
+        history = []
+        for t, tau in enumerate(taus):
+            g = {"w": jnp.full((1,), float(t + 1))}
+            history.append(float(t + 1))
+            d, live, st_ring = delayed_apply(st_ring, g, jnp.int32(tau))
+            src = t - tau
+            if src >= 0 and tau < K:
+                assert float(live) == 1.0
+                assert float(d["w"][0]) == history[src]
+            else:
+                assert float(live) == 0.0
+
+    @given(m=st.integers(1, 6), T=st.integers(5, 60))
+    @settings(max_examples=15, deadline=None)
+    def test_exact_sim_tau_invariants(self, m, T):
+        """Property: 0 <= tau_t <= t, and a worker's tau resets after its
+        own commit (tau counts only intermediate updates)."""
+        x0 = jnp.zeros((2,))
+        batches = jnp.zeros((T, 2))
+        order = uniform_commit_order(T, m, seed=T * 7 + m)
+        tab = jnp.full((64,), 0.01, jnp.float32)
+        tr = simulate_async_sgd(_quadratic_loss, x0, batches, order, tab, m=m)
+        taus = np.asarray(tr.taus)
+        assert (taus >= 0).all()
+        assert (taus <= np.arange(T)).all()
+        # per-worker: tau equals commits since that worker's previous commit
+        last = {}
+        for t, w in enumerate(order):
+            expected = t - (last[w] + 1) if w in last else t
+            assert taus[t] == expected
+            last[w] = t
+
+    def test_sample_tau_matches_pmf(self, key):
+        model = S.Poisson(5.0)
+        cdf = staleness_cdf(model.pmf_table(64))
+        keys = jax.random.split(key, 4000)
+        taus = np.asarray(jax.vmap(lambda k: sample_tau(k, cdf))(keys))
+        assert taus.mean() == pytest.approx(5.0, rel=0.1)
+        assert taus.min() >= 0
+
+
+class TestStatisticalEfficiency:
+    """Mini Fig-3: MindTheStep reaches epsilon in fewer iterations than
+    constant-alpha AsyncPSGD on a noisy quadratic at matched E[alpha]."""
+
+    @pytest.mark.slow
+    def test_mindthestep_beats_constant(self, key):
+        d, m, T = 16, 16, 3000
+        eig = jnp.linspace(0.5, 3.0, d)
+
+        def loss(x, b):
+            return 0.5 * jnp.sum(eig * (x - b) ** 2)
+
+        x0 = jnp.ones((d,)) * 2.0
+        batches = 0.3 * jax.random.normal(key, (T, d))
+        order = uniform_commit_order(T, m, seed=3)
+        alpha_c = 0.05
+
+        # observed tau pmf for the eq.-26 normalization
+        probe = simulate_async_sgd(
+            loss, x0, batches, order, jnp.full((256,), alpha_c, jnp.float32), m=m
+        )
+        pmf = S.empirical_pmf(np.asarray(probe.taus), tau_max=255)
+
+        geo = S.Geometric(p=max(float(pmf[0]), 1e-3))
+        adaptive = SS.make_schedule(
+            "geometric_momentum", alpha_c, geo, mu_star=0.0, tau_max=255,
+            normalize_pmf=pmf,
+        )
+        const = SS.constant(alpha_c, tau_max=255)
+
+        def iters_to(tr, eps):
+            l = np.asarray(tr.losses)
+            idx = np.nonzero(l < eps)[0]
+            return int(idx[0]) if idx.size else T + 1
+
+        tr_c = simulate_async_sgd(loss, x0, batches, order,
+                                  jnp.asarray(const.table, jnp.float32), m=m)
+        tr_a = simulate_async_sgd(loss, x0, batches, order,
+                                  jnp.asarray(adaptive.table, jnp.float32), m=m)
+        eps = 1.5
+        assert iters_to(tr_a, eps) <= iters_to(tr_c, eps)

@@ -1,0 +1,113 @@
+"""Blockwise attention (jnp path) vs naive oracle + cache machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import attention as A
+
+
+def _qkv(key, B, S, T, Nq, Nkv, H):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (B, S, Nq, H)),
+        jax.random.normal(ks[1], (B, T, Nkv, H)),
+        jax.random.normal(ks[2], (B, T, Nkv, H)),
+    )
+
+
+def _pos(B, S):
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+class TestBlockwise:
+    @pytest.mark.parametrize("window", [None, 16])
+    @pytest.mark.parametrize("softcap", [None, 30.0])
+    def test_matches_oracle(self, key, window, softcap):
+        B, S, Nq, Nkv, H = 2, 96, 4, 2, 32
+        q, k, v = _qkv(key, B, S, S, Nq, Nkv, H)
+        out = A.blockwise_attention(
+            q * H**-0.5, k, v, _pos(B, S), _pos(B, S),
+            causal=True, window=window, softcap=softcap, block_q=32, block_k=32,
+        )
+        ref = attention_ref(q, k, v, causal=True, window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+    @given(
+        s=st.integers(4, 80),
+        bq=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_block_size_invariance(self, s, bq, bk):
+        """Output must not depend on the tiling — the online-softmax law."""
+        key = jax.random.PRNGKey(s)
+        q, k, v = _qkv(key, 1, s, s, 2, 1, 16)
+        pos = _pos(1, s)
+        a = A.blockwise_attention(q, k, v, pos, pos, block_q=bq, block_k=bk)
+        b = A.blockwise_attention(q, k, v, pos, pos, block_q=s, block_k=s)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+    def test_banded_path_matches_dense_window(self, key):
+        """The O(S*W) banded gather == dense masked window attention."""
+        B, S, H = 1, 256, 16
+        q, k, v = _qkv(key, B, S, S, 2, 2, H)
+        pos = _pos(B, S)
+        # banded path triggers when T > window + block_q
+        banded = A.blockwise_attention(
+            q, k, v, pos, pos, window=32, block_q=32, block_k=32
+        )
+        ref = attention_ref(q, k, v, causal=True, window=32, scale=1.0)
+        np.testing.assert_allclose(np.asarray(banded), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+class TestCaches:
+    def test_ring_positions(self):
+        """Slot j of a ring of capacity C holds the largest pos p≡j (mod C) < L."""
+        pos = np.asarray(A.cache_positions_ring(4, jnp.asarray(6), 1))[0]
+        np.testing.assert_array_equal(pos, [4, 5, 2, 3])
+
+    def test_full_positions(self):
+        pos = np.asarray(A.cache_positions_full(6, jnp.asarray(3), 1))[0]
+        np.testing.assert_array_equal(pos, [0, 1, 2, -1, -1, -1])
+
+    def test_fill_ring_from_prefill(self, key):
+        k = jax.random.normal(key, (1, 7, 1, 4))
+        cache = A.fill_cache_from_prefill(k, k, capacity=4, ring=True)
+        # positions 3..6 survive; slot = pos % 4 -> [4, 5, 6, 3]
+        np.testing.assert_allclose(
+            np.asarray(cache["k"][0, :, 0, 0]),
+            np.asarray(k[0, [4, 5, 6, 3], 0, 0]),
+        )
+
+    def test_decode_equals_full_attention(self, key):
+        """decode_attention on a filled cache == last row of full attention."""
+        B, S, Nq, Nkv, H = 1, 10, 4, 2, 16
+        q, k, v = _qkv(key, B, S, S, Nq, Nkv, H)
+        full = A.blockwise_attention(q, k, v, _pos(B, S), _pos(B, S))
+        cache = {"k": k, "v": v}
+        cpos = A.cache_positions_full(S, jnp.asarray(S), B)
+        dec = A.decode_attention(
+            q[:, -1:], cache["k"], cache["v"], cpos, _pos(B, S)[:, -1:],
+        )
+        np.testing.assert_allclose(
+            np.asarray(dec[:, 0]), np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5
+        )
+
+    def test_sliding_window_decode_with_ring(self, key):
+        """Ring-cached decode == windowed full attention at the last position."""
+        B, S, N, H, W = 1, 12, 2, 8, 4
+        q, k, v = _qkv(key, B, S, S, N, N, H)
+        full = A.blockwise_attention(q, k, v, _pos(B, S), _pos(B, S), window=W)
+        cache = A.fill_cache_from_prefill(k, v, capacity=W, ring=True)
+        cpos = A.cache_positions_ring(W, jnp.asarray(S), B)
+        dec = A.decode_attention(
+            q[:, -1:], cache["k"], cache["v"], cpos, _pos(B, S)[:, -1:], window=W,
+        )
+        np.testing.assert_allclose(
+            np.asarray(dec[:, 0]), np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5
+        )

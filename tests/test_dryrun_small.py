@@ -1,0 +1,71 @@
+"""Dry-run integration: subprocess with 8 fake host devices (2x4 mesh).
+
+The production 256/512-chip sweeps run via ``python -m repro.launch.dryrun
+--all`` (results under experiments/dryrun); this test proves the machinery
+end-to-end on a mesh CI can afford.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(arch: str, shape: str, tmp_path) -> dict:
+    env = dict(os.environ)
+    env["REPRO_FAKE_DEVICES"] = "8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--small_mesh", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=560, cwd=REPO,
+    )
+    assert out.returncode == 0, f"dryrun failed:\n{out.stdout[-3000:]}\n{out.stderr[-3000:]}"
+    tag = f"{arch}_{shape}_small".replace(".", "_")
+    with open(os.path.join(str(tmp_path), tag + ".json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("stablelm-1.6b", "train_4k"),
+        ("qwen2-moe-a2.7b", "decode_32k"),
+        ("falcon-mamba-7b", "long_500k"),
+    ],
+)
+def test_dryrun_small_mesh(arch, shape, tmp_path):
+    rec = _run_dryrun(arch, shape, tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops"] > 0
+    assert rec["cost"]["hbm_bytes"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["collectives"]["total"] >= 0
+    # the mesh really had 8 devices
+    assert rec["num_chips"] == 8
+
+
+@pytest.mark.slow
+def test_production_records_exist_if_generated():
+    """If the full sweep ran (experiments/dryrun), every non-skip record is ok."""
+    d = os.path.join(REPO, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("production dry-run not generated in this checkout")
+    bad = []
+    n_ok = 0
+    for name in os.listdir(d):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        if rec.get("status") == "fail":
+            bad.append(name)
+        elif rec.get("status") == "ok":
+            n_ok += 1
+    assert not bad, f"failed dry-runs: {bad}"
+    assert n_ok >= 30

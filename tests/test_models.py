@@ -1,0 +1,228 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+same-family variant, one forward + one train step on CPU — shapes + no NaNs.
+Plus model-level invariants (causality, decode==forward consistency)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_configs, reduced
+from repro.data import make_batch_for
+from repro.models import model as M
+from repro.optim import sgd
+from repro.training import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module", params=list(ASSIGNED_ARCHS))
+def arch_setup(request):
+    cfg = reduced(get_config(request.param))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch_for(cfg, batch=2, seq=16, seed=0)
+    return request.param, cfg, params, batch
+
+
+class TestRegistry:
+    def test_all_archs_registered(self):
+        for a in ASSIGNED_ARCHS:
+            assert a in list_configs()
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            get_config("not-a-model")
+
+    @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+    def test_reduced_within_limits(self, arch):
+        cfg = reduced(get_config(arch))
+        assert cfg.d_model <= 512
+        assert cfg.num_layers <= 2 * cfg.pattern_period
+        assert cfg.experts_padded <= 4
+
+    @pytest.mark.parametrize(
+        "arch,params_b",
+        [
+            ("gemma2-27b", 27.2e9),
+            ("codeqwen1.5-7b", 7.25e9),
+            ("falcon-mamba-7b", 7.3e9),
+            ("recurrentgemma-9b", 9.5e9),
+            ("stablelm-1.6b", 1.6e9),
+            ("qwen3-moe-235b-a22b", 235e9),
+        ],
+    )
+    def test_param_counts_near_model_card(self, arch, params_b):
+        n = get_config(arch).param_count()
+        assert n == pytest.approx(params_b, rel=0.2), f"{arch}: {n / 1e9:.2f}B"
+
+    def test_qwen3_active_params(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        assert cfg.active_param_count() == pytest.approx(22e9, rel=0.2)
+
+
+class TestSmoke:
+    def test_forward_shapes_finite(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        logits, aux = M.forward(params, batch, cfg)
+        B, S = batch["tokens"].shape
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        assert bool(jnp.isfinite(aux)), arch
+
+    def test_train_step_reduces_or_finite(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        opt = sgd(0.01)
+        state = init_train_state(jax.random.PRNGKey(1), cfg, opt, params=params)
+        step = jax.jit(make_train_step(cfg, opt))
+        state, m1 = step(state, batch)
+        state, m2 = step(state, batch)
+        assert bool(jnp.isfinite(m1["loss"])), arch
+        # two steps on the same batch must reduce its loss
+        assert float(m2["loss"]) < float(m1["loss"]), arch
+
+    def test_decode_step(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        B = batch["tokens"].shape[0]
+        cache = M.init_decode_state(params, cfg, B, 32, cache_dtype=jnp.float32,
+                                    batch=batch)
+        tok = batch["tokens"][:, 0]
+        logits, cache2 = M.decode_step(params, cache, tok, 0, cfg)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        # cache must actually change
+        changed = jax.tree.map(
+            lambda a, b: bool(jnp.any(a != b)), cache, cache2
+        )
+        assert any(jax.tree.leaves(changed)), arch
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("arch", ["stablelm-1.6b", "gemma2-27b", "falcon-mamba-7b",
+                                      "recurrentgemma-9b"])
+    def test_causality(self, arch):
+        """Changing a future token must not affect earlier logits."""
+        cfg = reduced(get_config(arch))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        batch = make_batch_for(cfg, batch=1, seq=12, seed=0)
+        l1, _ = M.forward(params, batch, cfg)
+        toks = batch["tokens"].at[0, -1].set((batch["tokens"][0, -1] + 7) % cfg.vocab_size)
+        l2, _ = M.forward(params, {**batch, "tokens": toks}, cfg)
+        np.testing.assert_allclose(
+            np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), rtol=2e-4, atol=2e-4
+        )
+        assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]))
+
+    @pytest.mark.parametrize("arch", ["stablelm-1.6b", "gemma2-27b", "recurrentgemma-9b",
+                                      "falcon-mamba-7b", "qwen2-moe-a2.7b"])
+    def test_decode_matches_forward(self, arch):
+        """Token-by-token decode reproduces the full-sequence logits."""
+        cfg = reduced(get_config(arch))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 8
+        batch = make_batch_for(cfg, batch=B, seq=S, seed=1)
+        full_logits, _ = M.forward(params, batch, cfg)
+
+        cache = M.init_decode_state(params, cfg, B, S + 1, cache_dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            lg, cache = M.decode_step(params, cache, batch["tokens"][:, t], t, cfg)
+            outs.append(lg)
+        dec_logits = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-3, atol=2e-3
+        )
+
+    def test_prefill_matches_decode_continuation(self):
+        """prefill(prompt) then decode == decode from scratch."""
+        cfg = reduced(get_config("stablelm-1.6b"))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 6
+        batch = make_batch_for(cfg, batch=B, seq=S, seed=2)
+        nxt = batch["tokens"][:, -1]
+
+        lg_p, cache_p = M.prefill(params, batch, cfg, S + 4, cache_dtype=jnp.float32)
+        lg_pc, _ = M.decode_step(params, cache_p, nxt, S, cfg)
+
+        cache = M.init_decode_state(params, cfg, B, S + 4, cache_dtype=jnp.float32)
+        for t in range(S):
+            lg_d, cache = M.decode_step(params, cache, batch["tokens"][:, t], t, cfg)
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d), rtol=2e-3, atol=2e-3)
+        lg_dc, _ = M.decode_step(params, cache, nxt, S, cfg)
+        np.testing.assert_allclose(np.asarray(lg_pc), np.asarray(lg_dc), rtol=2e-3, atol=2e-3)
+
+    def test_whisper_decode_matches_teacher_forcing(self):
+        """Whisper step-by-step decode == the teacher-forced decoder pass."""
+        cfg = reduced(get_config("whisper-large-v3"))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 6
+        batch = make_batch_for(cfg, batch=B, seq=S, seed=3)
+        full_logits, _ = M.forward(params, batch, cfg)
+        cache = M.init_decode_state(params, cfg, B, S + 2, cache_dtype=jnp.float32,
+                                    batch=batch)
+        outs = []
+        for t in range(S):
+            lg, cache = M.decode_step(params, cache, batch["tokens"][:, t], t, cfg)
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_vlm_prefix_changes_output(self):
+        cfg = reduced(get_config("internvl2-2b"))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        batch = make_batch_for(cfg, batch=1, seq=8, seed=0)
+        l1, _ = M.forward(params, batch, cfg)
+        batch2 = {**batch, "prefix_embeds": batch["prefix_embeds"] + 1.0}
+        l2, _ = M.forward(params, batch2, cfg)
+        assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+    def test_moe_aux_loss_positive(self):
+        cfg = reduced(get_config("qwen2-moe-a2.7b"))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        batch = make_batch_for(cfg, batch=2, seq=16, seed=0)
+        _, aux = M.forward(params, batch, cfg)
+        assert float(aux) > 0.5  # balanced routing gives ~E*E/E... ~= E/k scale
+
+    def test_moe_capacity_overflow_drops_gracefully(self):
+        """Tokens beyond an expert's capacity are dropped (zero contribution),
+        not mis-routed — the Switch priority rule."""
+        import dataclasses
+
+        from repro.models import moe as MOE
+
+        cfg = reduced(get_config("qwen2-moe-a2.7b"))
+        cfg = dataclasses.replace(cfg, num_experts=4, num_experts_padded=4,
+                                  top_k=1, d_ff_expert=64, capacity_factor=0.01,
+                                  shared_expert_ff=0)
+        p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        out, aux = MOE.apply_moe(p, x, cfg)
+        assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(aux))
+        # with capacity ~1 slot per expert, most rows must be exactly zero
+        row_norms = jnp.linalg.norm(out.reshape(-1, cfg.d_model), axis=-1)
+        assert float((row_norms == 0).mean()) > 0.5
+
+    def test_moe_all_tokens_routed_with_ample_capacity(self):
+        import dataclasses
+
+        from repro.models import moe as MOE
+
+        cfg = reduced(get_config("qwen2-moe-a2.7b"))
+        cfg = dataclasses.replace(cfg, num_experts=4, num_experts_padded=4,
+                                  top_k=2, d_ff_expert=64, capacity_factor=8.0,
+                                  shared_expert_ff=0)
+        p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        out, _ = MOE.apply_moe(p, x, cfg)
+        row_norms = jnp.linalg.norm(out.reshape(-1, cfg.d_model), axis=-1)
+        assert float((row_norms > 0).mean()) == 1.0
+
+    def test_masked_labels_ignored(self):
+        cfg = reduced(get_config("stablelm-1.6b"))
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        batch = make_batch_for(cfg, batch=2, seq=10, seed=0)
+        loss1, _ = M.loss_fn(params, batch, cfg)
+        labels = batch["labels"].at[:, :4].set(-1)
+        loss2, m = M.loss_fn(params, {**batch, "labels": labels}, cfg)
+        assert float(m["n_tokens"]) < float(batch["labels"].size)
+        assert not np.isclose(float(loss1), float(loss2))

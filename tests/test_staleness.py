@@ -1,0 +1,95 @@
+"""Staleness distribution models (paper §IV): identities + fitting."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import staleness as S
+
+
+class TestPMFs:
+    @pytest.mark.parametrize(
+        "model",
+        [S.Geometric(0.3), S.BoundedUniform(12), S.Poisson(8.0), S.CMP(16.0, 1.3)],
+        ids=["geom", "unif", "pois", "cmp"],
+    )
+    def test_pmf_normalizes(self, model):
+        tab = model.pmf_table(2048)
+        assert tab.sum() == pytest.approx(1.0, abs=1e-6)
+        assert (tab >= 0).all()
+
+    def test_cmp_nu1_equals_poisson(self):
+        lam = 6.5
+        ks = np.arange(64)
+        np.testing.assert_allclose(
+            S.CMP(lam, 1.0).pmf(ks), S.Poisson(lam).pmf(ks), rtol=1e-8
+        )
+
+    @given(m=st.integers(2, 40), nu=st.floats(0.3, 4.0))
+    @settings(max_examples=30, deadline=None)
+    def test_cmp_mode_relation(self, m, nu):
+        """eq. (13): mode of CMP(m^nu, nu) is m (within floor rounding)."""
+        model = S.CMP.from_mode(m, nu)
+        tab = model.pmf_table(4 * m + 64)
+        empirical_mode = int(np.argmax(tab))
+        assert abs(empirical_mode - m) <= 1  # floor() boundary tolerance
+
+    def test_geometric_support_starts_at_zero(self):
+        g = S.Geometric(0.25)
+        assert g.pmf(0) == pytest.approx(0.25)
+        assert g.mode() == 0
+
+    def test_poisson_mode(self):
+        assert S.Poisson(7.3).mode() == 7
+
+    @pytest.mark.parametrize("model", [S.Geometric(0.2), S.Poisson(5.0), S.CMP(9.0, 1.1)])
+    def test_sampling_matches_mean(self, model, rng):
+        s = model.sample(rng, (20000,))
+        assert float(np.mean(s)) == pytest.approx(model.mean(), rel=0.1)
+
+
+class TestBhattacharyya:
+    def test_identity_is_zero(self):
+        p = S.Poisson(4.0).pmf_table(64)
+        assert S.bhattacharyya_distance(p, p) == pytest.approx(0.0, abs=1e-9)
+
+    def test_symmetry(self):
+        p = S.Poisson(4.0).pmf_table(64)
+        q = S.Geometric(0.2).pmf_table(64)
+        assert S.bhattacharyya_distance(p, q) == pytest.approx(
+            S.bhattacharyya_distance(q, p), rel=1e-9
+        )
+
+    def test_disjoint_is_large(self):
+        p = np.array([1.0, 0.0])
+        q = np.array([0.0, 1.0])
+        assert S.bhattacharyya_distance(p, q) > 100
+
+
+class TestFitting:
+    def test_fit_recovers_poisson(self, rng):
+        taus = rng.poisson(12.0, size=50000)
+        fit = S.Poisson.fit_mle(taus)
+        assert fit.lam == pytest.approx(12.0, rel=0.05)
+
+    def test_fit_all_prefers_true_family(self, rng):
+        taus = rng.poisson(16.0, size=50000)
+        fits = S.fit_all_models(taus, m=16)
+        d_pois = fits["Poisson"][1]
+        d_geom = fits["Geometric"][1]
+        assert d_pois < d_geom
+
+    def test_cmp_mode_relation_fit_1d(self, rng):
+        true = S.CMP.from_mode(8, 1.7)
+        taus = true.sample(rng, (50000,))
+        fit = S.CMP.fit_mode_relation(taus, m=8)
+        assert fit.mode() == true.mode()
+        d = S.bhattacharyya_distance(S.empirical_pmf(taus), fit.pmf_table(int(taus.max())))
+        assert d < 0.01
+
+    def test_empirical_pmf(self):
+        p = S.empirical_pmf(np.array([0, 0, 1, 3]))
+        np.testing.assert_allclose(p, [0.5, 0.25, 0.0, 0.25])

@@ -1,0 +1,151 @@
+"""Staleness-adaptive step sizes (paper §IV.B): numeric theorem verification.
+
+The key object is the Lemma-1 series weight
+``w(i) = p(i) alpha(i) - p(i+1) alpha(i+1)``:
+
+* Thm 4 (cmp_zeroing):   w(i) == 0 for all i             (series cancels)
+* Thm 5 (cmp_momentum):  w(i) == const * p(i)            (series == momentum)
+* Thm 3 (geometric):     w(i) decays geometrically with ratio (1-p)/C
+* Cor 2 == Thm 5 at nu=1; the incomplete-gamma form matches the prefix sum.
+"""
+
+import math
+
+import jax.scipy.special as jss
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import staleness as S
+from repro.core import step_size as SS
+
+
+def lemma1_weights(pmf: np.ndarray, table: np.ndarray) -> np.ndarray:
+    n = min(len(pmf), len(table))
+    pa = pmf[:n] * table[:n]
+    return pa[:-1] - pa[1:]
+
+
+class TestTheorem4:
+    @given(lam=st.floats(1.0, 20.0), nu=st.floats(0.5, 3.0))
+    @settings(max_examples=25, deadline=None)
+    def test_series_cancels_exactly(self, lam, nu):
+        model = S.CMP(lam, nu)
+        # raw schedule without clip/drop so the identity is exact
+        sched = SS.cmp_zeroing(1e-3, lam, nu, tau_max=64)
+        w = lemma1_weights(model.pmf_table(64), sched.table)
+        # weights are products of pmf ~ exp(-large); compare against scale
+        scale = np.abs(model.pmf_table(64)[:-1] * sched.table[:64]).max()
+        assert np.abs(w).max() <= 1e-10 * max(scale, 1e-300)
+
+
+class TestTheorem5:
+    @pytest.mark.parametrize("lam,nu,K", [(4.0, 1.0, 1.0), (8.0, 1.5, 0.5), (3.0, 0.8, 2.0)])
+    def test_series_is_momentum_form(self, lam, nu, K):
+        """w(i) = const * p(i): the stale-gradient series becomes implicit
+        momentum.  With the paper's eq. (16) e^lambda convention the constant
+        is K * exp(-lambda) (see DESIGN.md note on the Thm-5 normalization)."""
+        alpha = 1e-2
+        model = S.CMP(lam, nu)
+        sched = SS.cmp_momentum(alpha, lam, nu, K, tau_max=48)
+        pmf = model.pmf_table(48)
+        w = lemma1_weights(pmf, sched.table)
+        # restrict to the numerically meaningful support (tail pmf underflows)
+        keep = pmf[:-1] > 1e-8
+        ratio = w[keep] / pmf[:-1][keep]
+        expected = K * math.exp(-lam)
+        np.testing.assert_allclose(ratio, expected, rtol=1e-5)
+
+    def test_alpha0_is_alpha(self):
+        sched = SS.cmp_momentum(0.05, 6.0, 1.2, K=1.0)
+        assert sched.table[0] == pytest.approx(0.05)
+
+
+class TestCorollary2:
+    def test_matches_thm5_at_nu1(self):
+        a, lam, K = 0.01, 5.0, 1.0
+        t5 = SS.cmp_momentum(a, lam, 1.0, K, tau_max=64)
+        c2 = SS.poisson_momentum(a, lam, K, tau_max=64)
+        np.testing.assert_allclose(t5.table, c2.table, rtol=1e-10)
+
+    def test_gammaincc_identity(self):
+        """c(tau) = 1 - (K/alpha) Q(tau, lam) with Q the regularized upper
+        incomplete gamma — the paper's O(1) evaluation (eq. 17)."""
+        a, lam, K = 0.02, 7.0, 1.0
+        taus = np.arange(1, 40)
+        sched = SS.poisson_momentum(a, lam, K, tau_max=64)
+        core = np.exp(-taus * math.log(lam)) * np.array(
+            [math.gamma(t + 1) for t in taus]
+        )
+        c_table = sched.table[1:40] / (core * a)
+        q = np.asarray(jss.gammaincc(taus.astype(np.float64), lam))
+        np.testing.assert_allclose(c_table, 1.0 - (K / a) * q, rtol=1e-5, atol=1e-7)
+
+
+class TestTheorem3:
+    @given(p=st.floats(0.05, 0.8), mu=st.floats(-0.5, 1.5))
+    @settings(max_examples=25, deadline=None)
+    def test_cor1_momentum_roundtrip(self, p, mu):
+        C = SS.C_for_target_momentum(p, mu)
+        assert SS.implicit_momentum_geometric(p, C) == pytest.approx(mu, abs=1e-12)
+
+    def test_weights_decay_ratio(self):
+        """w(i+1)/w(i) = (1-p)/C for the eq. (9) schedule under Geom(p)."""
+        p, mu = 0.2, 0.5
+        C = SS.C_for_target_momentum(p, mu)
+        sched = SS.geometric_momentum(0.01, p, mu, tau_max=32)
+        pmf = S.Geometric(p).pmf_table(32)
+        w = lemma1_weights(pmf, sched.table)
+        ratios = w[1:12] / w[:11]
+        np.testing.assert_allclose(ratios, (1 - p) / C, rtol=1e-9)
+
+
+class TestProtocol:
+    """The paper's §VI experimental protocol transforms."""
+
+    def test_eq26_normalization(self):
+        """Direct normalization on a positive schedule is exact."""
+        model = S.Poisson(8.0)
+        pmf = model.pmf_table(128)
+        sched = SS.adadelay(0.03, tau_max=128)
+        norm = SS.normalize_expectation(sched, pmf, 0.01)
+        assert norm.expectation(pmf) == pytest.approx(0.01, rel=1e-9)
+
+    def test_clip(self):
+        sched = SS.cmp_zeroing(0.01, 4.0, 1.0, tau_max=64)  # blows up in tau!
+        clipped = SS.clip_table(sched, 0.01, 5.0)
+        assert clipped.table.max() <= 0.05 + 1e-12
+
+    def test_drop(self):
+        sched = SS.constant(0.01, tau_max=200)
+        dropped = SS.drop_above(sched, 150)
+        assert (dropped.table[151:] == 0).all()
+        assert (dropped.table[:151] == 0.01).all()
+
+    def test_make_schedule_full_protocol(self):
+        """Fig-3 configuration: poisson_momentum, K=1, lam=m, norm+clip+drop."""
+        m = 16
+        model = S.Poisson(float(m))
+        pmf = model.pmf_table(256)
+        sched = SS.make_schedule(
+            "poisson_momentum", 0.01, model, K=1.0, normalize_pmf=pmf
+        )
+        assert sched.table.min() >= 0.0
+        assert sched.table.max() <= 0.05 + 1e-9
+        # the 5x cap bounds the reachable expectation at
+        # 5 alpha_c * P[alpha(tau) > 0]; the fixpoint sits at min(that, alpha_c)
+        reachable = min(0.01, 0.05 * float(pmf[sched.table[: len(pmf)] > 0].sum()))
+        assert sched.expectation(pmf) == pytest.approx(reachable, rel=0.02)
+
+    def test_jit_gather(self):
+        import jax.numpy as jnp
+
+        sched = SS.constant(0.25, tau_max=8)
+        out = sched(jnp.asarray([0, 4, 99]))
+        np.testing.assert_allclose(np.asarray(out), [0.25, 0.25, 0.25])
+
+    @pytest.mark.parametrize("strategy", ["adadelay", "inverse_tau"])
+    def test_baselines_non_increasing(self, strategy):
+        sched = SS.make_schedule(strategy, 0.01, clip_factor=None, tau_drop=None)
+        assert (np.diff(sched.table) <= 1e-15).all()

@@ -1,0 +1,88 @@
+"""End-to-end behaviour: the paper's claim on a real (small) training run.
+
+MindTheStep-AsyncPSGD must need fewer SGD iterations than constant-alpha
+AsyncPSGD to reach a loss threshold, at matched expected step size (eq. 26) —
+the Fig. 3 protocol on a CPU-sized problem using the exact async simulator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_engine import simulate_async_sgd, uniform_commit_order
+from repro.core import staleness as S
+from repro.core import step_size as SS
+from repro.models.cnn import init_mlp_classifier, mlp_loss
+
+
+@pytest.mark.slow
+def test_mindthestep_statistical_efficiency_classifier(key):
+    """Fig-3 style: epochs-to-threshold, MLP classifier on Gaussian blobs."""
+    d_in, classes, bsz, m, T = 16, 4, 16, 16, 1500
+    rng = np.random.default_rng(0)
+    mus = rng.normal(size=(classes, d_in))
+    mus = 3.0 * mus / np.linalg.norm(mus, axis=1, keepdims=True)
+
+    ys = rng.integers(0, classes, size=(T, bsz))
+    xs = mus[ys] + rng.normal(size=(T, bsz, d_in))
+    batches = {"x": jnp.asarray(xs, jnp.float32), "labels": jnp.asarray(ys, jnp.int32)}
+
+    params = init_mlp_classifier(key, d_in=d_in, d_hidden=32, num_classes=classes)
+    order = uniform_commit_order(T, m, seed=1)
+    alpha_c = 0.08
+
+    def loss(p, b):
+        return mlp_loss(p, b)
+
+    # probe run to observe the real tau distribution (paper protocol)
+    probe = simulate_async_sgd(
+        loss, params, batches, order, jnp.full((256,), alpha_c, jnp.float32), m=m
+    )
+    pmf = S.empirical_pmf(np.asarray(probe.taus), tau_max=255)
+
+    geo = S.Geometric(p=max(float(pmf[0]), 1e-3))
+    adaptive = SS.make_schedule(
+        "geometric_momentum", alpha_c, geo, mu_star=0.0, tau_max=255, normalize_pmf=pmf
+    )
+    const = SS.constant(alpha_c, tau_max=255)
+
+    tr_c = simulate_async_sgd(loss, params, batches, order,
+                              jnp.asarray(const.table, jnp.float32), m=m)
+    tr_a = simulate_async_sgd(loss, params, batches, order,
+                              jnp.asarray(adaptive.table, jnp.float32), m=m)
+
+    def iters_to(tr, thresh):
+        sm = np.convolve(np.asarray(tr.losses), np.ones(25) / 25, mode="valid")
+        idx = np.nonzero(sm < thresh)[0]
+        return int(idx[0]) if idx.size else T + 1
+
+    thresh = 0.35
+    it_a, it_c = iters_to(tr_a, thresh), iters_to(tr_c, thresh)
+    assert it_a <= T, "adaptive never reached threshold"
+    # statistical efficiency: adaptive needs no more iterations (usually fewer)
+    assert it_a <= it_c * 1.05, (it_a, it_c)
+
+
+def test_exact_simulator_matches_paper_eq4(key):
+    """One commit of the simulator implements eq. (4) literally:
+    x_{t+1} = x_t - alpha(tau_t) grad F(x_{t - tau_t})."""
+    d = 4
+    x0 = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+    def loss(x, b):
+        return 0.5 * jnp.sum((x - b) ** 2)
+
+    batches = jnp.zeros((3, d))
+    order = np.array([0, 1, 1], dtype=np.int32)  # worker 0 commits, then 1 twice
+    tab = jnp.asarray([0.5, 0.25, 0.1], jnp.float32)
+    tr = simulate_async_sgd(loss, x0, batches, order, tab, m=2)
+    # commit 0: worker 0, tau=0, view=x0 -> x1 = x0 - 0.5*x0 = 0.5 x0
+    # commit 1: worker 1, tau=1 (read at 0, commit at 1), view=x0
+    #           x2 = x1 - 0.25 * x0
+    # commit 2: worker 1, tau=0 (re-read after its commit), view=x2
+    x1 = 0.5 * x0
+    x2 = x1 - 0.25 * x0
+    x3 = x2 - 0.5 * x2
+    np.testing.assert_array_equal(np.asarray(tr.taus), [0, 1, 0])
+    np.testing.assert_allclose(np.asarray(tr.params), np.asarray(x3), rtol=1e-6)

@@ -1,0 +1,136 @@
+"""Executable theory (paper §III & §V): Theorem 1, Theorem 6, Corollaries 3-4."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import staleness as S
+from repro.core import step_size as SS
+from repro.core import theory as T
+
+
+class TestTheorem1:
+    """SyncPSGD m-worker average == sequential SGD at batch m*b (bit-level)."""
+
+    def test_two_worker_equivalence(self, key):
+        d, b = 16, 8
+        x = jax.random.normal(key, (d,))
+        A = jnp.eye(d) * jnp.linspace(1, 3, d)
+
+        def grad(batch):  # mean squared loss grad at x over rows of `batch`
+            return jax.vmap(lambda r: A @ (x - r))(batch).mean(0)
+
+        B1 = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        B2 = jax.random.normal(jax.random.fold_in(key, 2), (b, d))
+        alpha = 0.1
+        # m=2 workers, average of their independent steps
+        avg = ((x - alpha * grad(B1)) + (x - alpha * grad(B2))) / 2.0
+        # one sequential step at batch 2b
+        big = x - alpha * grad(jnp.concatenate([B1, B2]))
+        np.testing.assert_allclose(np.asarray(avg), np.asarray(big), rtol=1e-5, atol=1e-6)
+
+    def test_effective_batch_and_bound(self):
+        assert T.effective_batch_size(8, 4) == 32
+        assert T.max_useful_workers(64) == 64
+
+    def test_variance_scaling(self, rng):
+        """Gradient-estimator variance shrinks ~1/b (the §III argument for
+        why huge effective batches hurt stochastic exploration)."""
+        n = 4000
+        data = rng.normal(size=(n,))
+        v1 = np.var([data[rng.integers(0, n, 4)].mean() for _ in range(2000)])
+        v2 = np.var([data[rng.integers(0, n, 16)].mean() for _ in range(2000)])
+        assert v2 < v1 / 2.5  # ~4x reduction expected; allow slack
+
+
+def _convex_constants(d=8):
+    """Quadratic f(x) = 0.5 x^T A x with A = diag(1..L): c = 1, L = L."""
+    eig = np.linspace(1.0, 4.0, d)
+    return eig
+
+
+class TestTheorem6:
+    def test_bound_holds_on_quadratic(self, key):
+        """Measured convergence of (synchronous tau=0) SGD on a strongly
+        convex quadratic stays under the Thm-6 iteration bound."""
+        d = 8
+        eig = _convex_constants(d)
+        A = jnp.diag(jnp.asarray(eig, jnp.float32))
+        c, L = float(eig.min()), float(eig.max())
+        x0 = jnp.ones((d,)) * 2.0
+        r0 = float(jnp.sum(x0**2))
+        eps = 0.05
+        noise = 0.05
+        M = math.sqrt((L * math.sqrt(r0)) ** 2 + d * noise**2) * 1.2
+
+        prob = T.ConvexProblem(c=c, L=L, M=M, r0=r0)
+        model = S.Geometric(1.0)  # tau == 0 deterministic
+        alpha = T.corollary3_alpha(prob, eps, tau_bar=0.0, theta=1.0)
+        sched = SS.constant(alpha, tau_max=4)
+        bound = T.theorem6_bound(prob, eps, sched, model)
+        assert math.isfinite(bound) and bound > 0
+
+        # run plain SGD with that alpha
+        x = x0
+        k = key
+        steps_needed = None
+        for t in range(int(bound) + 1):
+            if float(jnp.sum(x**2)) < eps:
+                steps_needed = t
+                break
+            k, sub = jax.random.split(k)
+            g = A @ x + noise * jax.random.normal(sub, (d,))
+            x = x - alpha * g
+        assert steps_needed is not None, f"did not converge within bound {bound:.0f}"
+        assert steps_needed <= bound
+
+    def test_bound_monotone_in_staleness(self):
+        """More expected staleness -> larger iteration bound (Cor 3)."""
+        prob = T.ConvexProblem(c=1.0, L=4.0, M=8.0, r0=4.0)
+        eps = 0.05
+        bounds = [T.corollary3_bound(prob, eps, tau_bar=tb) for tb in (0, 2, 8, 32)]
+        assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+
+    def test_bound_linear_in_expected_tau(self):
+        """Cor 3: T = O(E[tau]) — the improvement over prior O(max tau)."""
+        prob = T.ConvexProblem(c=1.0, L=4.0, M=8.0, r0=4.0)
+        eps = 0.05
+        b1 = T.corollary3_bound(prob, eps, tau_bar=10.0)
+        b2 = T.corollary3_bound(prob, eps, tau_bar=20.0)
+        ratio = b2 / b1
+        assert ratio < 2.05  # asymptotically linear
+
+    def test_invalid_theta_raises(self):
+        prob = T.ConvexProblem(c=1.0, L=2.0, M=4.0, r0=1.0)
+        with pytest.raises(ValueError):
+            T.corollary3_alpha(prob, 0.1, 1.0, theta=2.5)
+
+
+class TestCorollary4:
+    def test_nonincreasing_bound_finite(self):
+        prob = T.ConvexProblem(c=1.0, L=2.0, M=4.0, r0=4.0)
+        model = S.Poisson(4.0)
+        sched = SS.adadelay(0.002, tau_max=64)
+        b = T.corollary4_bound(prob, 0.05, sched, model)
+        assert math.isfinite(b) and b > 0
+
+    def test_rejects_increasing_schedule(self):
+        prob = T.ConvexProblem(c=1.0, L=2.0, M=4.0, r0=4.0)
+        model = S.Poisson(4.0)
+        sched = SS.cmp_zeroing(0.001, 4.0, 1.0, tau_max=32)  # increasing in tau
+        with pytest.raises(ValueError):
+            T.corollary4_bound(prob, 0.05, sched, model)
+
+
+class TestSigmaSeries:
+    def test_matches_weights(self, rng):
+        pmf = S.Poisson(3.0).pmf_table(16)  # 17 entries
+        tab = SS.constant(0.01, tau_max=16).table
+        grads = rng.normal(size=(16, 4))
+        out = T.sigma_series(pmf, tab, grads)
+        pa = pmf * tab  # n = 16 series terms
+        expected = ((pa[:-1] - pa[1:])[:, None] * grads[:16]).sum(0)
+        np.testing.assert_allclose(out, expected, rtol=1e-9)

@@ -1,0 +1,149 @@
+"""Training substrate: steps, loop, data pipeline, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_engine.delayed import staleness_cdf
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config, reduced
+from repro.core.staleness import Poisson
+from repro.core.step_size import make_schedule
+from repro.data import classification_batches, lm_batches, make_batch_for
+from repro.optim import sgd
+from repro.training import (
+    init_train_state,
+    make_async_train_step,
+    make_serve_step,
+    make_train_step,
+    train_loop,
+)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return reduced(get_config("stablelm-1.6b"), d_model=128)
+
+
+class TestData:
+    def test_lm_batches_deterministic(self):
+        a = next(lm_batches(100, 2, 16, seed=3))
+        b = next(lm_batches(100, 2, 16, seed=3))
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_lm_batches_has_structure(self):
+        """Planted bigrams: successor entropy must be far below uniform."""
+        it = lm_batches(50, 8, 64, seed=0, structure=0.9)
+        toks = np.concatenate([np.asarray(next(it)["tokens"]).ravel() for _ in range(5)])
+        pairs = {}
+        for a, b in zip(toks[:-1], toks[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+        top_frac = np.mean(
+            [max(np.bincount(v).max(), 1) / len(v) for v in pairs.values() if len(v) > 10]
+        )
+        assert top_frac > 0.5  # dominant successor exists
+
+    def test_labels_shifted(self):
+        b = next(lm_batches(100, 1, 8, seed=1))
+        np.testing.assert_array_equal(
+            np.asarray(b["labels"][0, :-1]), np.asarray(b["tokens"][0, 1:])
+        )
+        assert int(b["labels"][0, -1]) == -1
+
+    def test_classification_separable(self):
+        b = next(classification_batches(16, 4, 512, seed=0, scale=4.0))
+        x, y = np.asarray(b["x"]), np.asarray(b["labels"])
+        mus = np.stack([x[y == c].mean(0) for c in range(4)])
+        d = np.linalg.norm(mus[0] - mus[1])
+        assert d > 2.0
+
+
+class TestSteps:
+    def test_sync_loss_decreases(self, small_cfg):
+        opt = sgd(0.05)
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt)
+        step = make_train_step(small_cfg, opt)
+        state, hist = train_loop(
+            step, state, lm_batches(small_cfg.vocab_size, 4, 32, seed=0),
+            num_steps=30, log_every=10,
+        )
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_async_step_runs_and_taus_sampled(self, small_cfg):
+        opt = sgd(0.05)
+        model = Poisson(4.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0)
+        cdf = staleness_cdf(model.pmf_table(15))
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt, async_ring=16)
+        step = jax.jit(make_async_train_step(
+            small_cfg, opt, jnp.asarray(sched.table, jnp.float32), 0.05, cdf
+        ))
+        taus = []
+        batches = lm_batches(small_cfg.vocab_size, 4, 32, seed=0)
+        for _ in range(20):
+            state, m = step(state, next(batches))
+            taus.append(int(m["tau"]))
+        assert np.mean(taus) == pytest.approx(4.0, abs=2.0)
+        assert bool(jnp.isfinite(m["loss"]))
+
+    def test_async_warmup_drops(self, small_cfg):
+        """live == 0 until the ring holds the requested delay."""
+        opt = sgd(0.05)
+        model = Poisson(8.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0)
+        cdf = staleness_cdf(np.eye(16)[8])  # tau == 8 always
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt, async_ring=16)
+        step = jax.jit(make_async_train_step(
+            small_cfg, opt, jnp.asarray(sched.table, jnp.float32), 0.05, cdf
+        ))
+        batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        lives = []
+        for _ in range(10):
+            state, m = step(state, next(batches))
+            lives.append(float(m["live"]))
+        assert lives[:8] == [0.0] * 8
+        assert lives[8] == 1.0
+
+    def test_serve_step_greedy(self, small_cfg):
+        from repro.models import model as M
+
+        params = M.init_model(jax.random.PRNGKey(0), small_cfg)
+        serve = jax.jit(make_serve_step(small_cfg))
+        cache = M.init_decode_state(params, small_cfg, 2, 16, cache_dtype=jnp.float32)
+        out = serve(params, cache, jnp.ones((2,), jnp.int32), jnp.int32(0))
+        assert out["next_token"].shape == (2,)
+        assert out["logits"].shape == (2, small_cfg.vocab_size)
+        am = jnp.argmax(out["logits"], axis=-1)
+        np.testing.assert_array_equal(np.asarray(out["next_token"]), np.asarray(am))
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, key):
+        tree = {"a": jax.random.normal(key, (4, 5)),
+                "b": {"c": jnp.arange(3), "d": jnp.float32(2.5)}}
+        save_pytree(str(tmp_path / "ck"), tree)
+        back = load_pytree(str(tmp_path / "ck"), tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+    def test_shape_mismatch_raises(self, tmp_path, key):
+        tree = {"a": jnp.ones((4,))}
+        save_pytree(str(tmp_path / "ck"), tree)
+        with pytest.raises(AssertionError):
+            load_pytree(str(tmp_path / "ck"), {"a": jnp.ones((5,))})
+
+    def test_train_state_checkpoint(self, tmp_path, small_cfg):
+        from repro.checkpoint import load_train_state, save_train_state
+
+        opt = sgd(0.01)
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt)
+        save_train_state(str(tmp_path), state, 42)
+        back, step = load_train_state(str(tmp_path), state)
+        assert step == 42
+        np.testing.assert_allclose(
+            np.asarray(back.params["embed"]["embedding"]),
+            np.asarray(state.params["embed"]["embedding"]),
+        )
