@@ -1,6 +1,6 @@
 """Benchmark driver — one section per paper table/figure + system benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--only NAME]
 
 Sections:
   tau_models    Table I + Fig 2  (staleness-model fit quality)
@@ -38,13 +38,28 @@ SECTIONS = {
 }
 
 
+# CI smoke set: every perf script is imported and executed at reduced scale
+# so the benchmarks can't silently rot; the one exclusion is the heavyweight
+# dry-run roofline section, exercised by tests/test_dryrun_small.py instead.
+SMOKE_SECTIONS = (
+    "tau_models", "convergence", "sync_scaling", "convex_bounds",
+    "ablation_momentum", "kernels",
+)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true", help="reduced iteration counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fast iteration counts over the smoke section set")
     ap.add_argument("--only", choices=list(SECTIONS), default=None)
     args = ap.parse_args()
+    if args.smoke:
+        args.fast = True
 
-    names = [args.only] if args.only else list(SECTIONS)
+    names = ([args.only] if args.only
+             else list(SMOKE_SECTIONS) if args.smoke
+             else list(SECTIONS))
     failures = []
     for name in names:
         print(f"\n{'=' * 72}\n>> benchmark: {name}\n{'=' * 72}")

@@ -35,4 +35,6 @@ for step in range(0, len(trace), 2000):
           f"{model.mode():>5}  {np.round(sched.table[:4], 4)}")
 
 print("\nThe fitted lambda tracks the worker count through the scale-up —")
-print("the exponential forgetting (decay=0.5) lets the histogram adapt.")
+print("the exponential forgetting (decay=0.5, applied once per")
+print("rebuild_schedule refresh boundary; fit() is a pure read) lets the")
+print("histogram adapt.")

@@ -5,6 +5,8 @@ from repro.async_engine.delayed import (
     init_delayed,
     sample_tau,
     delayed_apply,
+    delayed_apply_batch,
+    delayed_combine,
 )
 
 __all__ = [
@@ -17,4 +19,6 @@ __all__ = [
     "init_delayed",
     "sample_tau",
     "delayed_apply",
+    "delayed_apply_batch",
+    "delayed_combine",
 ]

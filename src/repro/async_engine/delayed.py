@@ -26,7 +26,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["DelayedGradients", "init_delayed", "sample_tau", "delayed_apply", "staleness_cdf"]
+__all__ = [
+    "DelayedGradients",
+    "init_delayed",
+    "sample_tau",
+    "delayed_apply",
+    "delayed_apply_batch",
+    "delayed_combine",
+    "staleness_cdf",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -74,14 +82,7 @@ def delayed_apply(
     """
     K = jax.tree.leaves(state.ring)[0].shape[0]
     t = state.step
-    slot = jnp.mod(t, K)
-    ring = jax.tree.map(
-        lambda r, g: jax.lax.dynamic_update_index_in_dim(
-            r, g.astype(r.dtype), slot, axis=0
-        ),
-        state.ring,
-        new_grad,
-    )
+    ring = _push(state, new_grad)
     src_step = t - tau
     src_slot = jnp.mod(src_step, K)
     live = ((src_step >= 0) & (tau < K)).astype(jnp.float32)
@@ -89,3 +90,62 @@ def delayed_apply(
         lambda r: jax.lax.dynamic_index_in_dim(r, src_slot, axis=0, keepdims=False), ring
     )
     return delayed, live, DelayedGradients(ring=ring, step=t + 1)
+
+
+def _push(state: DelayedGradients, new_grad: Any) -> Any:
+    K = jax.tree.leaves(state.ring)[0].shape[0]
+    slot = jnp.mod(state.step, K)
+    return jax.tree.map(
+        lambda r, g: jax.lax.dynamic_update_index_in_dim(
+            r, g.astype(r.dtype), slot, axis=0
+        ),
+        state.ring,
+        new_grad,
+    )
+
+
+def delayed_apply_batch(
+    state: DelayedGradients,
+    new_grad: Any,
+    taus: jnp.ndarray,  # (W,) int32
+) -> tuple[Any, jnp.ndarray, DelayedGradients]:
+    """Push ``new_grad``; pop the ``W`` gradients from ``taus`` steps ago.
+
+    The vectorized counterpart of :func:`delayed_apply`: one server tick of an
+    ``W``-worker simulation, where worker ``w`` delivers the gradient computed
+    ``taus[w]`` steps ago.  Returns ``(delayed, live, new_state)`` with every
+    leaf of ``delayed`` carrying a leading ``(W,)`` axis (a gather over ring
+    slots) and ``live`` the (W,) per-worker drop mask of the scalar version.
+    """
+    K = jax.tree.leaves(state.ring)[0].shape[0]
+    t = state.step
+    ring = _push(state, new_grad)
+    src_step = t - taus
+    src_slot = jnp.mod(src_step, K)
+    live = ((src_step >= 0) & (taus < K)).astype(jnp.float32)
+    delayed = jax.tree.map(lambda r: jnp.take(r, src_slot, axis=0), ring)
+    return delayed, live, DelayedGradients(ring=ring, step=t + 1)
+
+
+def delayed_combine(
+    state: DelayedGradients,
+    new_grad: Any,
+    taus: jnp.ndarray,  # (W,)
+    weights: jnp.ndarray,  # (W,) — e.g. alpha(tau_w) / (alpha_c * W)
+) -> tuple[Any, jnp.ndarray, DelayedGradients]:
+    """Push + batched pop + weighted combine in one pass.
+
+    Returns the single f32 gradient pytree
+
+        g = sum_w weights[w] * live[w] * g_{t - taus[w]}
+
+    so the caller never materializes the ``(W, ...)`` gather — the contraction
+    happens leaf-wise via ``tensordot`` over the gathered rows.  ``live``
+    zeroes warmup / beyond-ring workers (the paper's drop rule).
+    """
+    delayed, live, new_state = delayed_apply_batch(state, new_grad, taus)
+    w = (jnp.asarray(weights, jnp.float32) * live).astype(jnp.float32)
+    combined = jax.tree.map(
+        lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=1), delayed
+    )
+    return combined, live, new_state

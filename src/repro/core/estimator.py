@@ -30,8 +30,11 @@ class OnlineStalenessEstimator:
     ----------
     m:          number of workers (drives the mode relation, eq. 13).
     tau_max:    histogram support (the paper drops tau > 150 anyway).
-    decay:      exponential forgetting applied at each refit so the estimator
-                tracks non-stationary schedulers (beyond-paper, documented).
+    decay:      exponential forgetting applied once per refresh boundary
+                (:meth:`forget`, called by :meth:`rebuild_schedule`) so the
+                estimator tracks non-stationary schedulers (beyond-paper,
+                documented).  :meth:`fit` is a pure read — calling it twice
+                is idempotent.
     """
 
     m: int
@@ -48,6 +51,17 @@ class OnlineStalenessEstimator:
         taus = np.atleast_1d(np.asarray(tau, dtype=np.int64))
         np.add.at(self.counts, np.clip(taus, 0, self.tau_max), 1.0)
         self.n_seen += taus.size
+
+    def observe_counts(self, counts) -> None:
+        """Merge a pre-binned histogram (e.g. the in-jit ``AdaptState.hist``
+        drained at a refresh boundary).  Mass beyond ``tau_max`` folds into
+        the last bin — the same clip :meth:`observe` applies per sample."""
+        c = np.asarray(counts, dtype=np.float64)
+        n = min(c.size, self.counts.size)
+        self.counts[:n] += c[:n]
+        if c.size > n:
+            self.counts[-1] += c[n:].sum()
+        self.n_seen += int(c.sum())
 
     def pmf(self) -> np.ndarray:
         total = self.counts.sum()
@@ -77,9 +91,14 @@ class OnlineStalenessEstimator:
             model = S.BoundedUniform(int(nz[-1]) if nz.size else 0)
         else:
             raise ValueError(f"unknown family {family!r}")
+        return model
+
+    def forget(self) -> None:
+        """Apply the exponential forgetting once — the explicit refresh
+        boundary.  Kept out of :meth:`fit` so read-path calls stay idempotent
+        (fit-twice used to decay the histogram twice)."""
         if self.decay < 1.0:
             self.counts *= self.decay
-        return model
 
     def rebuild_schedule(
         self,
@@ -93,16 +112,25 @@ class OnlineStalenessEstimator:
         tau_drop: int | None = 150,
         normalize: bool = True,
     ) -> SS.StepSizeSchedule:
-        """Fit the model and build the paper-protocol schedule in one call."""
+        """Fit the model and build the paper-protocol schedule in one call.
+
+        This IS the refresh boundary: exponential forgetting (``decay``) is
+        applied exactly once per SUCCESSFUL rebuild, after the histogram has
+        been read — a failed rebuild (e.g. the eq.-26 normalization raising)
+        must not erode the observations it will need to try again.
+        """
         model = self.fit(family)
-        return SS.make_schedule(
+        pmf = self.pmf() if normalize else None
+        sched = SS.make_schedule(
             strategy,
             alpha_c,
             model,
             K=K,
             mu_star=mu_star,
             tau_max=self.tau_max,
-            normalize_pmf=self.pmf() if normalize else None,
+            normalize_pmf=pmf,
             clip_factor=clip_factor,
             tau_drop=tau_drop,
         )
+        self.forget()
+        return sched

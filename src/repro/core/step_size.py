@@ -34,6 +34,7 @@ Those are exposed as composable transforms on the table.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable
 
@@ -78,11 +79,16 @@ class StepSizeSchedule:
     def tau_max(self) -> int:
         return len(self.table) - 1
 
+    @functools.cached_property
+    def device_table(self) -> jax.Array:
+        """The f32 table on device, uploaded ONCE per schedule (the schedule
+        is frozen, so the cache can never go stale)."""
+        return jnp.asarray(self.table, dtype=jnp.float32)
+
     def __call__(self, tau):
         """Jit-friendly gather: ``tau`` may be a traced integer array."""
-        jt = jnp.asarray(self.table, dtype=jnp.float32)
         idx = jnp.clip(jnp.asarray(tau, dtype=jnp.int32), 0, self.tau_max)
-        return jt[idx]
+        return self.device_table[idx]
 
     def alpha_np(self, tau) -> np.ndarray:
         idx = np.clip(np.asarray(tau, dtype=np.int64), 0, self.tau_max)

@@ -1,4 +1,13 @@
-"""Jit wrappers: flatten pytree leaves -> padded (R, 128) tiles -> fused kernel."""
+"""Jit wrappers: flatten pytree leaves -> padded (R, 128) tiles -> fused kernel.
+
+``adaptive_update_flat`` is the production entry point the fused optimizer
+path (``repro.optim.base.momentum(..., fused=True)``) uses: on TPU it
+dispatches to the Pallas kernel with interpret mode OFF (one HBM pass, as the
+kernel docstring promises); on CPU/GPU it lowers to a single fused XLA
+elementwise expression over the flat buffer — same one-pass data movement,
+since Pallas interpret mode is a Python-level interpreter suitable only for
+correctness tests.
+"""
 
 from __future__ import annotations
 
@@ -9,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.adaptive_update.kernel import BLOCK_ROWS, LANES, fused_update_call
+from repro.kernels.adaptive_update.ref import adaptive_update_ref
 
-__all__ = ["adaptive_update", "adaptive_update_tree"]
+__all__ = ["adaptive_update", "adaptive_update_flat", "adaptive_update_tree"]
 
 _TILE = BLOCK_ROWS * LANES
 
@@ -37,6 +47,30 @@ def adaptive_update(p, g, v, alpha, mu, *, interpret: bool = True):
         p_new.reshape(-1)[:n].reshape(p.shape),
         v_new.reshape(-1)[:n].reshape(v.shape),
     )
+
+
+def adaptive_update_flat(
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha,
+    mu,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Fused ``v' = mu v - alpha g; p' = p + v'`` on flat 1-D buffers.
+
+    ``use_pallas=None`` auto-selects: the Pallas kernel on TPU (where
+    ``interpret=False`` compiles to a real one-HBM-pass kernel), the XLA
+    fallback elsewhere.  Both paths read each operand once and write each
+    output once; numerics are identical to :func:`adaptive_update_ref`.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return adaptive_update(p, g, v, alpha, mu, interpret=interpret)
+    return adaptive_update_ref(p, g, v, alpha, mu)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

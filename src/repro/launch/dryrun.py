@@ -73,6 +73,9 @@ def _lower_and_analyze(cfg, shape_name: str, mesh, *, save_hlo: str | None = Non
         t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):
+            # older jaxlibs return [dict] (one entry per executable)
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
 
     coll = parse_collective_bytes(hlo)

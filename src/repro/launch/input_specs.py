@@ -59,11 +59,29 @@ def ring_size_for(cfg) -> int:
     return 8
 
 
+def workers_for(cfg) -> int:
+    """Simulated async workers per server tick for dry-run train shapes —
+    bounded by the ring so sampled delays are servable."""
+    return max(1, ring_size_for(cfg) // 2)
+
+
+def _default_adapt(cfg, *, alpha_c: float = 0.01):
+    """The AdaptState the dry-run train step carries — built by the same
+    recipe as the production launcher so the roofline lowers the step that
+    actually trains."""
+    from repro.training.adapt import default_adapt_setup
+
+    _, _, adapt = default_adapt_setup(alpha_c, workers_for(cfg), ring_size_for(cfg))
+    return adapt
+
+
 def _train_specs(cfg, *, batch: int, seq: int):
     opt = sgd(0.01)
     K = ring_size_for(cfg)
     state = jax.eval_shape(
-        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt, async_ring=K)
+        lambda: init_train_state(
+            jax.random.PRNGKey(0), cfg, opt, async_ring=K, adapt=_default_adapt(cfg)
+        )
     )
     batch_sds = batch_shape_structs(cfg, batch=batch, seq=seq)
     return (state, batch_sds)
@@ -102,26 +120,17 @@ def input_specs(arch: str, shape_name: str, *, unroll: bool = False) -> tuple:
 
 def step_for_cfg(cfg, shape_name: str, *, alpha_c: float = 0.01):
     """The concrete step function the dry-run lowers for this combination."""
-    import numpy as np
-
-    from repro.async_engine.delayed import staleness_cdf
-    from repro.core.staleness import Poisson
-    from repro.core.step_size import make_schedule
     from repro.training.steps import make_async_train_step, make_serve_step
 
     seq, batch, kind = INPUT_SHAPES[shape_name]
 
     if kind == "train":
         # The paper's production configuration: Poisson(m) staleness model,
-        # eq. (17) step size with K=1, ring of delayed gradients.
-        m = 16  # data-parallel groups acting as async workers
-        model = Poisson(float(m))
-        sched = make_schedule("poisson_momentum", alpha_c, model, K=1.0,
-                              tau_max=ring_size_for(cfg) * 4)
-        cdf = staleness_cdf(model.pmf_table(ring_size_for(cfg) - 1))
+        # eq. (17) step size with K=1, ring of delayed gradients.  The alpha
+        # table / tau CDF ride in TrainState.adapt (see _default_adapt).
         opt = sgd(alpha_c)
         return make_async_train_step(
-            cfg, opt, jnp.asarray(sched.table, jnp.float32), alpha_c, cdf
+            cfg, opt, alpha_c=alpha_c, num_workers=workers_for(cfg)
         )
     if kind == "prefill":
         # vlm: the vision prefix occupies cache slots ahead of the tokens

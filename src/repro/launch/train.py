@@ -7,8 +7,15 @@ On a real TPU slice this builds the production mesh and pjits the step with
 the Megatron/FSDP shardings from :mod:`repro.sharding.specs`; on CPU (CI) the
 ``--reduced`` flag trains the reduced config on the default 1-device mesh.
 The MindTheStep configuration mirrors the paper's Fig. 3 protocol: Poisson
-staleness model with lambda = m, eq. (17) step size with K = 1, normalization
-(eq. 26) against the observed tau histogram, clip at 5 alpha_c, drop tau>150.
+staleness model with lambda = m, eq. (17) step size with K = alpha_c (the
+implicit-momentum magnitude, in step-size units), normalization (eq. 26)
+against the observed tau histogram, clip at 5 alpha_c, drop tau>150.
+
+With ``--refresh_every N`` the adaptation runs online: the compiled step
+samples W worker taus per tick and histograms them in-jit; every N steps the
+host drains the histogram, refits, and swaps fresh tables into the
+jit-resident :class:`AdaptState` (no retrace).  ``--fused`` applies updates
+through the fused flat-buffer path (Pallas ``adaptive_update`` on TPU).
 """
 
 from __future__ import annotations
@@ -16,17 +23,18 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.async_engine.delayed import staleness_cdf
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
-from repro.core.estimator import OnlineStalenessEstimator
-from repro.core.staleness import Poisson
-from repro.core.step_size import make_schedule
 from repro.data import lm_batches
-from repro.optim import mindthestep, sgd
-from repro.training import init_train_state, make_async_train_step, make_train_step, train_loop
+from repro.optim import mindthestep, momentum, sgd
+from repro.training import (
+    default_adapt_setup,
+    init_train_state,
+    make_async_train_step,
+    make_train_step,
+    train_loop,
+)
 
 
 def main():
@@ -41,37 +49,51 @@ def main():
     ap.add_argument("--workers", type=int, default=16, help="modeled async workers m")
     ap.add_argument("--ring", type=int, default=16, help="delayed-gradient ring size")
     ap.add_argument("--refresh_every", type=int, default=0, help="online refit cadence")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused flat-buffer momentum apply (Pallas on TPU)")
+    ap.add_argument("--momentum", type=float, default=None,
+                    help="heavy-ball mu (selects the momentum optimizer; "
+                         "defaults to 0.9 when --fused is set; 0.0 is honored)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    opt = sgd(args.lr)
-    state = init_train_state(
-        jax.random.PRNGKey(args.seed), cfg, opt,
-        async_ring=args.ring if args.async_psgd else 0,
-    )
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
-    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M async={args.async_psgd}")
+    if args.fused or args.momentum is not None:
+        mu = 0.9 if args.momentum is None else args.momentum
+        opt = momentum(args.lr, mu, fused=args.fused)
+    else:
+        opt = sgd(args.lr)
 
-    estimator = mts = None
+    mts = adapt = None
     if args.async_psgd:
-        model = Poisson(float(args.workers))
-        sched = make_schedule("poisson_momentum", args.lr, model, K=1.0, tau_max=args.ring * 4)
-        cdf = staleness_cdf(model.pmf_table(args.ring - 1))
-        step = make_async_train_step(cfg, opt, jnp.asarray(sched.table, jnp.float32), args.lr, cdf)
-        estimator = OnlineStalenessEstimator(m=args.workers, tau_max=args.ring * 4)
-        mts = mindthestep(opt, sched, args.lr, m=args.workers)
+        sched, model, adapt = default_adapt_setup(args.lr, args.workers, args.ring)
+        # m enables the online estimator; its tau_max must cover adapt's so a
+        # refreshed table always fills the jit-resident one.
+        mts = mindthestep(opt, sched, args.lr, m=args.workers, tau_max=adapt.tau_max)
+        step = make_async_train_step(cfg, opt, alpha_c=args.lr, num_workers=args.workers)
     else:
         step = make_train_step(cfg, opt)
+
+    state = init_train_state(
+        jax.random.PRNGKey(args.seed), cfg, opt,
+        async_ring=args.ring if args.async_psgd else 0, adapt=adapt,
+    )
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M async={args.async_psgd} "
+          f"fused={args.fused}")
 
     batches = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
     state, history = train_loop(
         step, state, batches, num_steps=args.steps,
-        estimator=estimator, mts=mts, refresh_every=args.refresh_every,
+        mts=mts, refresh_every=args.refresh_every,
         log_every=max(args.steps // 10, 1),
     )
+    if args.async_psgd and args.refresh_every:
+        lam = mts.estimator.fit("poisson").lam
+        print(f"online estimator: lam={lam:.2f} (m={args.workers}), "
+              f"n_seen={mts.estimator.n_seen}")
     print(f"final loss: {history[-1]['loss']:.4f}")
 
 

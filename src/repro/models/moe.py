@@ -35,6 +35,20 @@ from repro.models.layers import Params, _act, truncated_normal
 from repro.sharding.ctx import current_rules
 
 
+def _shard_map(fun, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map across jax versions: older releases ship it under
+    ``jax.experimental.shard_map``, and the replication-check flag was
+    renamed ``check_rep`` -> ``check_vma`` independently of the top-level
+    promotion — so feature-detect the kwarg, not just the attribute."""
+    import inspect
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    flag = "check_vma" if "check_vma" in inspect.signature(sm).parameters else "check_rep"
+    return sm(fun, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{flag: check_vma})
+
+
 def init_moe(key, cfg) -> Params:
     d, e, fe = cfg.d_model, cfg.experts_padded, cfg.d_ff_expert
     ks = jax.random.split(key, 6)
@@ -177,7 +191,7 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]
             }
 
             @functools.partial(
-                jax.shard_map,
+                _shard_map,
                 mesh=mesh,
                 in_specs=(wspec, bspec),
                 out_specs=(bspec, P()),
@@ -217,7 +231,7 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]
             }
 
             @functools.partial(
-                jax.shard_map,
+                _shard_map,
                 mesh=mesh,
                 in_specs=(wspec, bspec),
                 out_specs=(bspec, P()),

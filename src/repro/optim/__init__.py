@@ -6,6 +6,8 @@ from repro.optim.base import (
     apply_updates,
     global_norm,
     clip_by_global_norm,
+    pack_flat,
+    unpack_flat,
 )
 from repro.optim.mindthestep import MindTheStep, mindthestep
 
@@ -17,6 +19,8 @@ __all__ = [
     "apply_updates",
     "global_norm",
     "clip_by_global_norm",
+    "pack_flat",
+    "unpack_flat",
     "MindTheStep",
     "mindthestep",
 ]

@@ -21,6 +21,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Any
 
@@ -32,6 +33,8 @@ __all__ = [
     "apply_updates",
     "global_norm",
     "clip_by_global_norm",
+    "pack_flat",
+    "unpack_flat",
 ]
 
 
@@ -57,6 +60,35 @@ def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
 
 
 # ---------------------------------------------------------------------------
+# Flat-param packing: the seam between pytree land and the fused server apply
+# ---------------------------------------------------------------------------
+
+def pack_flat(tree: Params, dtype=jnp.float32) -> jnp.ndarray:
+    """Pack every leaf of ``tree`` into one contiguous 1-D ``dtype`` buffer.
+
+    Thin wrapper over ``jax.flatten_util.ravel_pytree`` (leaf order is
+    ``jax.tree.leaves`` order).  The fused server apply (Pallas
+    ``adaptive_update``) runs over this single buffer in one HBM pass instead
+    of one dispatch per leaf.
+    """
+    from jax.flatten_util import ravel_pytree
+
+    if not jax.tree.leaves(tree):
+        return jnp.zeros((0,), dtype)
+    return ravel_pytree(tree)[0].astype(dtype)
+
+
+def unpack_flat(flat: jnp.ndarray, like: Params) -> Params:
+    """Split a packed buffer back into the shapes/dtypes of ``like``."""
+    from jax.flatten_util import ravel_pytree
+
+    canonical, unravel = ravel_pytree(like)
+    # unravel type-checks its input against the ravel dtype of `like` (e.g.
+    # bf16 params); the cast is the same per-leaf down-cast unravel applies.
+    return unravel(flat.astype(canonical.dtype))
+
+
+# ---------------------------------------------------------------------------
 # SGD
 # ---------------------------------------------------------------------------
 
@@ -79,9 +111,20 @@ def sgd(lr: float) -> Optimizer:
 # Momentum (Polyak heavy ball, eq. 5 of the paper)
 # ---------------------------------------------------------------------------
 
-def momentum(lr: float, mu: float = 0.9) -> Optimizer:
+def momentum(lr: float, mu: float = 0.9, *, fused: bool = False) -> Optimizer:
     """``v <- mu v - alpha g;  x <- x + v`` — the explicit-momentum baseline
-    the paper's implicit asynchrony-induced momentum is compared against."""
+    the paper's implicit asynchrony-induced momentum is compared against.
+
+    ``fused=True`` routes the apply through the fused
+    :mod:`repro.kernels.adaptive_update` path: the velocity lives as ONE flat
+    f32 buffer and the whole update is a single fused pass over it (Pallas
+    kernel on TPU, one fused XLA elementwise op elsewhere) instead of a
+    per-leaf ``tree.map`` dispatch — the paper's "the server apply must be
+    fast so tau_S stays small" requirement.  Numerics match the unfused path
+    to f32 rounding; only the opt-state layout differs (flat vs pytree).
+    """
+    if fused:
+        return _momentum_fused(lr, mu)
 
     def init(params):
         return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
@@ -91,6 +134,36 @@ def momentum(lr: float, mu: float = 0.9) -> Optimizer:
         v = jax.tree.map(lambda v, g: mu * v - step * g.astype(jnp.float32), state, grads)
         new = jax.tree.map(lambda p, v: (p.astype(jnp.float32) + v).astype(p.dtype), params, v)
         return new, v
+
+    return Optimizer(init, update)
+
+
+def _momentum_fused(lr: float, mu: float) -> Optimizer:
+    """Momentum over a flat-packed parameter buffer (see :func:`momentum`).
+
+    ``update`` accepts the gradient either as a pytree matching ``params`` or
+    already packed as a flat 1-D f32 buffer (callers that keep gradients
+    flat-resident skip the per-step gradient pack).  Note the pytree
+    ``(grads, state, params)`` interface still forces a params pack/unpack
+    per step; the fused win is the single-dispatch apply itself — see
+    ``benchmarks/kernels_bench.py`` for both the isolated-apply and the
+    full round-trip timings.
+    """
+    from repro.kernels.adaptive_update.ops import adaptive_update_flat
+
+    def init(params):
+        n = sum(int(np.prod(l.shape)) if l.shape else 1 for l in jax.tree.leaves(params))
+        return jnp.zeros((n,), jnp.float32)
+
+    def update(grads, state, params, scale=1.0):
+        if isinstance(grads, jax.Array) and grads.ndim == 1:
+            g_flat = grads.astype(jnp.float32)
+        else:
+            g_flat = pack_flat(grads)
+        p_flat = pack_flat(params)
+        alpha = jnp.asarray(lr, jnp.float32) * scale
+        p_new, v_new = adaptive_update_flat(p_flat, g_flat, state, alpha, jnp.float32(mu))
+        return unpack_flat(p_new, params), v_new
 
     return Optimizer(init, update)
 

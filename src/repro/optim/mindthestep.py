@@ -14,10 +14,13 @@ staleness observation.  The base optimizer sees ``scale = alpha(tau)/alpha_c``
 and stays oblivious to asynchrony, exactly the framework's "modularized
 alpha" design (§IV.A).
 
-The wrapper also exposes the online-estimation hook: ``observe(tau)`` feeds
-the host-side histogram and ``refresh()`` refits the staleness model and
-rebuilds the table (the jit side only ever sees a fresh table array via
-``donate``-free closure swap — tables are tiny).
+The wrapper also exposes the online-estimation hook: ``observe(tau)`` /
+``observe_counts(hist)`` feed the host-side histogram and ``refresh()``
+refits the staleness model and rebuilds the table.  The jit side consumes
+the result through :class:`~repro.training.adapt.AdaptState` — the table is
+a step *input*, so a refresh is a pure data swap (no retrace).  Exponential
+forgetting is applied exactly once per ``refresh()`` (the estimator's
+explicit refresh boundary), never on the ``fit()`` read path.
 """
 
 from __future__ import annotations
@@ -54,19 +57,29 @@ class MindTheStep:
         return self.base.update(grads, state, params, scale=factor * scale)
 
     def table(self) -> jnp.ndarray:
-        return jnp.asarray(self.schedule.table, jnp.float32)
+        return self.schedule.device_table
 
     # -- Online adaptation (host side, between steps) ------------------------
     def observe(self, tau) -> None:
         if self.estimator is not None:
             self.estimator.observe(np.asarray(tau))
 
+    def observe_counts(self, counts) -> None:
+        """Merge a pre-binned histogram (the drained in-jit ``AdaptState.hist``)."""
+        if self.estimator is not None:
+            self.estimator.observe_counts(counts)
+
     def refresh(self, strategy: str = "poisson_momentum", *, family: str = "poisson",
-                K: float = 1.0, normalize: bool = True) -> None:
-        """Refit the staleness model from observations and rebuild alpha(tau)."""
+                K: float | None = None, normalize: bool = True) -> None:
+        """Refit the staleness model from observations and rebuild alpha(tau).
+
+        ``K`` defaults to ``alpha_c`` (eq. 16/17's momentum magnitude is in
+        step-size units; ``K >> alpha_c`` zeroes the table on most taus).
+        """
         assert self.estimator is not None, "construct with an estimator to refresh"
         self.schedule = self.estimator.rebuild_schedule(
-            strategy, self.alpha_c, family=family, K=K, normalize=normalize
+            strategy, self.alpha_c, family=family,
+            K=self.alpha_c if K is None else K, normalize=normalize,
         )
 
 

@@ -1,3 +1,13 @@
+from repro.training.adapt import (
+    AdaptState,
+    alpha_lookup,
+    default_adapt_setup,
+    host_refresh,
+    init_adapt,
+    make_adapt,
+    record_taus,
+    sample_taus,
+)
 from repro.training.steps import (
     TrainState,
     init_train_state,
@@ -8,6 +18,14 @@ from repro.training.steps import (
 from repro.training.loop import train_loop
 
 __all__ = [
+    "AdaptState",
+    "init_adapt",
+    "make_adapt",
+    "default_adapt_setup",
+    "sample_taus",
+    "alpha_lookup",
+    "record_taus",
+    "host_refresh",
     "TrainState",
     "init_train_state",
     "make_train_step",

@@ -1,0 +1,227 @@
+"""Jit-resident adaptation state for online MindTheStep (paper §IV).
+
+The paper's online adaptation is a feedback loop: observe tau -> refit the
+CMP/Poisson staleness model -> rebuild ``alpha(tau)`` -> keep training.  For
+that loop to survive ``jax.jit`` the adaptation artifacts must be step
+*inputs*, not closure constants — otherwise ``refresh()`` rebuilds a table the
+compiled step never sees (the closure-baking bug this module removes).
+
+:class:`AdaptState` is a pytree threaded through ``TrainState``:
+
+* ``alpha_table`` — f32 ``alpha(tau)`` lookup, gathered in-jit per worker;
+* ``tau_cdf``     — inverse-CDF table of the fitted staleness model, sampled
+  in-jit (a *vector* of ``W`` taus per step, one per simulated worker);
+* ``hist``        — int32 staleness histogram, scatter-added in-jit.
+
+The host syncs only at ``refresh_every`` boundaries: :func:`host_refresh`
+pulls the histogram (the ONLY device->host transfer of the adaptation loop),
+feeds it to the :class:`~repro.core.estimator.OnlineStalenessEstimator`,
+refits, and returns a new ``AdaptState`` with identical shapes — so the next
+call of the already-compiled step applies the fresh tables without retracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.async_engine.delayed import staleness_cdf
+
+__all__ = [
+    "AdaptState",
+    "init_adapt",
+    "make_adapt",
+    "default_adapt_setup",
+    "sample_taus",
+    "alpha_lookup",
+    "record_taus",
+    "host_refresh",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdaptState:
+    """Adaptation tables + telemetry, resident in the jitted step.
+
+    All three arrays keep fixed shapes across refreshes (``alpha_table`` and
+    ``hist`` share support ``[0, tau_max]``) — a refresh is a pure data swap.
+    """
+
+    alpha_table: jnp.ndarray  # (tau_max + 1,) f32 — alpha(tau)
+    tau_cdf: jnp.ndarray  # (S,) f32 — inverse-CDF sampling table
+    hist: jnp.ndarray  # (tau_max + 1,) i32 — observed-tau histogram
+
+    @property
+    def tau_max(self) -> int:
+        return self.alpha_table.shape[0] - 1
+
+
+def init_adapt(alpha_table, tau_cdf) -> AdaptState:
+    """Build an AdaptState from raw tables (histogram starts empty)."""
+    at = jnp.asarray(alpha_table, jnp.float32)
+    return AdaptState(
+        alpha_table=at,
+        tau_cdf=jnp.asarray(tau_cdf, jnp.float32),
+        hist=jnp.zeros(at.shape, jnp.int32),
+    )
+
+
+def make_adapt(schedule, model, *, cdf_support: int, tau_max: int | None = None) -> AdaptState:
+    """AdaptState from a :class:`StepSizeSchedule` + fitted staleness model.
+
+    ``cdf_support`` bounds the sampled taus to ``[0, cdf_support)`` — set it to
+    the delayed-ring depth so sampled delays are (mostly) servable.
+    """
+    table = np.asarray(schedule.table, np.float64)
+    if tau_max is not None:
+        assert len(table) >= tau_max + 1, "schedule table shorter than tau_max"
+        table = table[: tau_max + 1]
+    return init_adapt(table, staleness_cdf(model.pmf_table(cdf_support - 1)))
+
+
+def default_adapt_setup(alpha_c: float, workers: int, ring: int, *, tau_max: int | None = None):
+    """The production async recipe, shared by the launcher and the dry-run
+    specs so they always lower/train the same step: Poisson(workers) staleness
+    model, eq.-17 schedule with K = alpha_c (implicit-momentum magnitude in
+    step-size units) normalized per eq. 26 against the ring-truncated pmf the
+    sampler actually draws from, and an AdaptState whose CDF covers the ring.
+
+    Returns ``(schedule, model, adapt)``.
+    """
+    from repro.core.staleness import Poisson
+    from repro.core.step_size import make_schedule
+
+    tau_max = ring * 4 if tau_max is None else tau_max
+    model = Poisson(float(workers))
+    # The raw eq.-17 core is ~1e-8 at tau ~ lambda; without the normalization
+    # the initial phase would train at effectively zero step size.
+    pmf = model.pmf_table(ring - 1)
+    sched = make_schedule(
+        "poisson_momentum", alpha_c, model, K=alpha_c,
+        tau_max=tau_max, normalize_pmf=pmf / np.sum(pmf),
+    )
+    return sched, model, make_adapt(sched, model, cdf_support=ring, tau_max=tau_max)
+
+
+# ---------------------------------------------------------------------------
+# In-jit primitives
+# ---------------------------------------------------------------------------
+
+def sample_taus(key: jax.Array, cdf: jnp.ndarray, num: int) -> jnp.ndarray:
+    """Draw ``num`` iid taus ~ fitted model via inverse CDF — (num,) int32.
+
+    One draw per simulated worker: the vectorized counterpart of
+    :func:`repro.async_engine.delayed.sample_tau`.
+    """
+    u = jax.random.uniform(key, (num,))
+    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+
+
+def alpha_lookup(adapt: AdaptState, taus: jnp.ndarray) -> jnp.ndarray:
+    """Gather ``alpha(tau)`` for a vector of (possibly traced) taus."""
+    idx = jnp.clip(taus, 0, adapt.tau_max)
+    return adapt.alpha_table[idx]
+
+
+def record_taus(adapt: AdaptState, taus: jnp.ndarray) -> AdaptState:
+    """Scatter-add observed taus into the in-jit histogram.
+
+    Clips to the histogram support — the same clip the host-side estimator's
+    ``observe()`` applies, so the two bookkeepers agree bin-for-bin.
+    """
+    idx = jnp.clip(taus, 0, adapt.tau_max)
+    return AdaptState(
+        alpha_table=adapt.alpha_table,
+        tau_cdf=adapt.tau_cdf,
+        hist=adapt.hist.at[idx].add(1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side refresh boundary
+# ---------------------------------------------------------------------------
+
+def host_refresh(
+    adapt: AdaptState,
+    mts: Any,
+    *,
+    strategy: str = "poisson_momentum",
+    family: str = "poisson",
+    K: float | None = None,
+    normalize: bool = True,
+    refresh_cdf: bool = False,
+    logger: Any = print,
+) -> AdaptState:
+    """Drain the in-jit histogram, refit, and return same-shape fresh tables.
+
+    ``K`` (eq. 16/17's implicit-momentum magnitude, in step-size units)
+    defaults to ``mts.alpha_c``: that keeps ``c(tau)`` in ``[0, 1]`` so the
+    rebuilt table has support on the observed taus.  ``K >> alpha_c`` zeroes
+    every bin past the first few and the eq.-26 normalization fails — pass it
+    explicitly only if that aggressive-drop policy is what you want.
+
+    ``mts`` is a :class:`~repro.optim.mindthestep.MindTheStep` constructed
+    with an estimator.  This is the only point where adaptation state crosses
+    the device->host boundary; everything it returns re-enters the compiled
+    step as ordinary inputs (no retrace — shapes are invariant).
+
+    Only the *policy* (``alpha_table``) is rebuilt from the refit by default.
+    The *sampler* (``tau_cdf``) models the simulated environment — worker/
+    scheduler delay, which does not change because our estimate of it did —
+    so it stays fixed.  Swapping it from the refit model would close a
+    self-referential loop: taus sampled from a ring-truncated CDF bias the
+    fit low, the biased fit produces an even lower CDF, and lambda drifts
+    monotonically away from the true worker count.  ``refresh_cdf=True``
+    opts into the swap for experiments that want the sampler to track the
+    fit anyway.
+    """
+    from repro.core.step_size import STRATEGIES
+
+    assert mts.estimator is not None, "host_refresh needs a MindTheStep with an estimator"
+    # Fail fast on misconfiguration: the fallback below must only absorb the
+    # data-dependent eq.-26 normalization failure, never a typo'd strategy or
+    # family that would otherwise log "kept previous schedule" forever.
+    assert strategy in STRATEGIES, f"unknown strategy {strategy!r}; choose from {STRATEGIES}"
+    assert family in ("poisson", "cmp", "geometric", "uniform"), f"unknown family {family!r}"
+    if K is None:
+        K = mts.alpha_c
+
+    counts = np.asarray(jax.device_get(adapt.hist))
+    mts.estimator.observe_counts(counts)
+    new_cdf = adapt.tau_cdf
+    if refresh_cdf:
+        # fit() is a pure read (idempotent): build the sampler swap before
+        # refresh() applies the once-per-boundary forgetting.
+        model = mts.estimator.fit(family)
+        new_cdf = staleness_cdf(model.pmf_table(adapt.tau_cdf.shape[0] - 1))
+    try:
+        mts.refresh(strategy, family=family, K=K, normalize=normalize)
+    except ValueError as e:
+        # The refit schedule can put zero step size on ALL observed taus
+        # (aggressive K/alpha zeroing + the clip/drop protocol), making the
+        # eq.-26 normalization impossible.  A refresh boundary must never
+        # kill a long run: keep the current schedule and say so — via the
+        # loop logger, not warnings.warn, whose dedup would silence every
+        # occurrence after the first.
+        if logger is not None:
+            logger(
+                f"host_refresh: kept previous schedule "
+                f"(n_seen={mts.estimator.n_seen}): {e}"
+            )
+
+    table = np.asarray(mts.schedule.table, np.float64)
+    T = adapt.alpha_table.shape[0]
+    assert len(table) >= T, (
+        f"refreshed schedule support {len(table) - 1} < adapt tau_max {T - 1}; "
+        "construct the estimator with tau_max >= adapt.tau_max"
+    )
+    return AdaptState(
+        alpha_table=jnp.asarray(table[:T], jnp.float32),
+        tau_cdf=new_cdf,
+        hist=jnp.zeros_like(adapt.hist),
+    )

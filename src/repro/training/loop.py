@@ -1,18 +1,22 @@
 """Host-side training loop with online staleness adaptation.
 
-The loop owns the non-jit concerns: stepping the data iterator, feeding
-observed staleness back into the :class:`OnlineStalenessEstimator`, rebuilding
-the ``alpha(tau)`` table every ``refresh_every`` steps (the paper's
-online-fashion adaptation), metric aggregation and checkpointing.
+The loop owns the non-jit concerns: stepping the data iterator, metric
+aggregation, checkpointing, and the *refresh boundary* of the paper's online
+adaptation.  The compiled step does everything per-step (tau sampling, alpha
+gather, histogram scatter-add) on-device; the host touches adaptation state
+only every ``refresh_every`` steps, where :func:`~repro.training.adapt
+.host_refresh` drains the in-jit histogram, refits the staleness model, and
+feeds fresh tables back in as ordinary step inputs — no per-step blocking
+device->host transfer, no retrace.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable, Iterable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["train_loop"]
@@ -24,15 +28,24 @@ def train_loop(
     batches: Iterable[Any],
     *,
     num_steps: int,
-    estimator=None,
     mts=None,
     refresh_every: int = 0,
+    refresh_kwargs: dict | None = None,
     log_every: int = 50,
     logger: Callable[[str], None] = print,
     checkpoint_fn: Callable[[Any, int], None] | None = None,
     checkpoint_every: int = 0,
 ) -> tuple[Any, list[dict]]:
-    """Run ``num_steps`` of ``step_fn`` over ``batches``; returns (state, history)."""
+    """Run ``num_steps`` of ``step_fn`` over ``batches``; returns (state, history).
+
+    Pass ``mts`` (a :class:`~repro.optim.mindthestep.MindTheStep` with an
+    estimator) plus ``refresh_every`` to enable online adaptation: the state
+    must carry an :class:`~repro.training.adapt.AdaptState` (``state.adapt``),
+    which is refreshed in place of the old closure-swap — the jitted step is
+    never re-traced.
+    """
+    from repro.training.adapt import host_refresh
+
     history: list[dict] = []
     jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
     t0 = time.perf_counter()
@@ -41,10 +54,18 @@ def train_loop(
     for i in range(num_steps):
         batch = next(it)
         state, metrics = jitted(state, batch)
-        if estimator is not None and "tau" in metrics:
-            estimator.observe(int(metrics["tau"]))
         if mts is not None and refresh_every and (i + 1) % refresh_every == 0:
-            mts.refresh()
+            adapt = getattr(state, "adapt", None)
+            assert adapt is not None, (
+                "refresh_every set but the state carries no AdaptState — "
+                "build it with init_adapt/make_adapt and pass it to init_train_state"
+            )
+            state = dataclasses.replace(
+                state,
+                adapt=host_refresh(
+                    adapt, mts, **{"logger": logger, **(refresh_kwargs or {})}
+                ),
+            )
         if (i + 1) % log_every == 0 or i == num_steps - 1:
             host = {k: float(np.asarray(v)) for k, v in metrics.items()}
             host["step"] = i + 1

@@ -5,9 +5,14 @@ Three step kinds:
 * ``make_train_step``       — synchronous data-parallel step (the SyncPSGD
   baseline of paper §III; on the mesh, the batch axis IS the worker axis and
   Theorem 1's effective batch is explicit).
-* ``make_async_train_step`` — MindTheStep-AsyncPSGD on the mesh: gradient
-  pushed into the delayed ring, a tau-stale gradient popped and applied with
-  ``alpha(tau)`` (paper eq. 4 + Algorithm 1, async-as-delay adaptation).
+* ``make_async_train_step`` — MindTheStep-AsyncPSGD on the mesh: per step a
+  *vector* of ``W`` worker staleness values is sampled in-jit from the CDF
+  table in ``state.adapt``, the matching ``W`` delayed gradients are popped
+  from the ring and applied as an ``alpha(tau)``-weighted average (paper
+  eq. 4 + Algorithm 1, async-as-delay adaptation, m-worker simulation).
+  All adaptation artifacts — alpha table, tau CDF, staleness histogram — ride
+  in :class:`~repro.training.adapt.AdaptState` as step INPUTS, so a host-side
+  ``refresh()`` swaps them without retracing the compiled step.
 * ``make_serve_step``       — one decode step against a KV cache (inference
   shapes ``decode_32k`` / ``long_500k``).
 
@@ -23,9 +28,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.async_engine.delayed import DelayedGradients, delayed_apply, init_delayed, sample_tau
+from repro.async_engine.delayed import DelayedGradients, delayed_combine, init_delayed
 from repro.models import model as M
 from repro.optim.base import Optimizer
+from repro.training.adapt import AdaptState, alpha_lookup, record_taus, sample_taus
 
 __all__ = [
     "TrainState",
@@ -44,6 +50,7 @@ class TrainState:
     step: jnp.ndarray
     rng: jax.Array
     delayed: DelayedGradients | None = None
+    adapt: AdaptState | None = None
 
 
 def init_train_state(
@@ -52,6 +59,7 @@ def init_train_state(
     opt: Optimizer,
     *,
     async_ring: int = 0,
+    adapt: AdaptState | None = None,
     params: Any | None = None,
 ) -> TrainState:
     kp, kr = jax.random.split(key)
@@ -72,6 +80,7 @@ def init_train_state(
         step=jnp.zeros((), jnp.int32),
         rng=kr,
         delayed=init_delayed(params, async_ring) if async_ring else None,
+        adapt=adapt,
     )
 
 
@@ -104,7 +113,7 @@ def make_train_step(cfg, opt: Optimizer) -> Callable:
         new_params, new_opt = opt.update(grads, state.opt_state, state.params)
         new_state = TrainState(
             params=new_params, opt_state=new_opt, step=state.step + 1,
-            rng=state.rng, delayed=state.delayed,
+            rng=state.rng, delayed=state.delayed, adapt=state.adapt,
         )
         return new_state, {"loss": loss, **metrics}
 
@@ -114,37 +123,55 @@ def make_train_step(cfg, opt: Optimizer) -> Callable:
 def make_async_train_step(
     cfg,
     opt: Optimizer,
-    alpha_table: jnp.ndarray,  # (tau_max+1,) — the MindTheStep schedule
+    *,
     alpha_c: float,
-    tau_cdf: jnp.ndarray,  # inverse-CDF table of the fitted staleness model
+    num_workers: int = 1,
 ) -> Callable:
     """MindTheStep-AsyncPSGD step (async-as-delay on the mesh).
 
     Per step: compute the gradient at the current params, push to the ring,
-    pop the gradient from ``tau ~ fitted model`` steps ago, and apply it with
-    step size ``alpha(tau)`` (zero while the ring warms up — the paper's
-    drop rule).  Returns tau in the metrics so the host-side estimator can
-    ``observe()`` and periodically ``refresh()`` the schedule.
+    sample ``num_workers`` staleness values from the CDF table in
+    ``state.adapt``, pop the matching delayed gradients, and apply their
+    ``alpha(tau)``-weighted average
+
+        g_eff = (1/W) sum_w  alpha(tau_w)/alpha_c * live_w * g_{t - tau_w}
+
+    (``live`` zeroes warmup / beyond-ring workers — the paper's drop rule).
+    Observed taus are scatter-added into the in-jit histogram; NOTHING is
+    transferred to the host per step.  The alpha table and tau CDF are read
+    from ``state.adapt``, so a host-side refresh swaps them as ordinary step
+    inputs — no retrace, no recompile.
     """
-    tau_max = alpha_table.shape[0] - 1
+    W = int(num_workers)
+    assert W >= 1
 
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        assert state.adapt is not None, "async step needs TrainState.adapt (see init_adapt)"
+        assert state.delayed is not None, "async step needs a delayed ring (async_ring > 0)"
+
         def lf(p):
             return M.loss_fn(p, batch, cfg)
 
         (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
         grads = _constrain_grads(grads, cfg)
         rng, sub = jax.random.split(state.rng)
-        tau = sample_tau(sub, tau_cdf)
-        delayed_grad, live, new_ring = delayed_apply(state.delayed, grads, tau)
-        alpha = alpha_table[jnp.clip(tau, 0, tau_max)]
-        scale = (alpha / jnp.float32(alpha_c)) * live
-        new_params, new_opt = opt.update(delayed_grad, state.opt_state, state.params, scale=scale)
+        taus = sample_taus(sub, state.adapt.tau_cdf, W)
+        alpha = alpha_lookup(state.adapt, taus)
+        weights = alpha / jnp.float32(alpha_c * W)
+        g_eff, live, new_ring = delayed_combine(state.delayed, grads, taus, weights)
+        adapt = record_taus(state.adapt, taus)
+        new_params, new_opt = opt.update(g_eff, state.opt_state, state.params)
         new_state = TrainState(
             params=new_params, opt_state=new_opt, step=state.step + 1,
-            rng=rng, delayed=new_ring,
+            rng=rng, delayed=new_ring, adapt=adapt,
         )
-        return new_state, {"loss": loss, "tau": tau, "alpha": alpha, "live": live, **metrics}
+        return new_state, {
+            "loss": loss,
+            "tau_mean": jnp.mean(taus.astype(jnp.float32)),
+            "alpha_mean": jnp.mean(alpha),
+            "live_frac": jnp.mean(live),
+            **metrics,
+        }
 
     return train_step
 

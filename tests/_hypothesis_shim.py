@@ -1,0 +1,115 @@
+"""Minimal stand-in for ``hypothesis`` so the tier-1 suite runs in
+environments where the real package is not installed (CI installs the real
+thing from requirements-dev.txt; this shim keeps `pytest` green without it).
+
+Only what the tier-1 tests use is implemented:
+
+* ``strategies.integers(min_value, max_value)``
+* ``strategies.floats(min_value, max_value)``
+* ``strategies.booleans()`` / ``strategies.sampled_from(seq)``
+* ``strategies.lists(elements, min_size=, max_size=)``
+* ``@given(**strategy_kwargs)`` — runs the test body ``max_examples`` times
+  with examples drawn from a per-test deterministically seeded RNG (property
+  tests degrade to seeded fuzz tests — far weaker than real shrinking
+  hypothesis, but the invariants still get exercised).
+* ``@settings(max_examples=, deadline=)`` — honored for ``max_examples``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def example(self, rng: np.random.Generator):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value: float, max_value: float, **_ignored):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _Booleans(_Strategy):
+    def example(self, rng):
+        return bool(rng.integers(2))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size: int = 0, max_size: int | None = None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None else self.min_size + 10
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.sampled_from = _SampledFrom
+strategies.booleans = lambda: _Booleans()
+strategies.lists = _Lists
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) or getattr(
+                fn, "_shim_settings", {}
+            )
+            max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed so failures reproduce
+            rng = np.random.default_rng(zlib.adler32(fn.__qualname__.encode()))
+            for _ in range(max_examples):
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # hide the strategy parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items() if name not in strategy_kwargs]
+        )
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,394 @@
+"""Jit-resident adaptation: AdaptState threading, refresh-without-retrace,
+in-jit histogram parity, batched delayed ring, fused optimizer path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_engine.delayed import (
+    delayed_apply,
+    delayed_apply_batch,
+    delayed_combine,
+    init_delayed,
+    staleness_cdf,
+)
+from repro.configs import get_config, reduced
+from repro.core.estimator import OnlineStalenessEstimator
+from repro.core.staleness import Poisson
+from repro.core.step_size import make_schedule
+from repro.data import lm_batches
+from repro.optim import mindthestep, momentum, pack_flat, sgd, unpack_flat
+from repro.training import (
+    host_refresh,
+    init_adapt,
+    init_train_state,
+    make_adapt,
+    make_async_train_step,
+    sample_taus,
+    train_loop,
+)
+from repro.training.adapt import AdaptState, record_taus
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return reduced(get_config("stablelm-1.6b"), d_model=128)
+
+
+class TestRefreshNoRetrace:
+    """Regression for the closure-baking bug: refresh() must change the alpha
+    the ALREADY-COMPILED step applies, without a retrace."""
+
+    def test_new_table_applies_without_retrace(self, small_cfg):
+        opt = sgd(0.05)
+        model = Poisson(4.0)
+        # constant table: alpha_mean == alpha_c regardless of the tau draw, so
+        # the gathered value pins down WHICH table the compiled step read.
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=8, tau_max=31)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=8, adapt=adapt
+        )
+        traces = []
+        base = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4)
+
+        def counting(state, batch):
+            traces.append(1)  # runs only when jax traces
+            return base(state, batch)
+
+        step = jax.jit(counting)
+        batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        state, m0 = step(state, next(batches))
+        assert len(traces) == 1
+        assert float(m0["alpha_mean"]) == pytest.approx(0.05)
+
+        # swap in a doubled alpha table — same shapes, plain data
+        state = dataclasses.replace(
+            state,
+            adapt=AdaptState(
+                alpha_table=state.adapt.alpha_table * 2.0,
+                tau_cdf=state.adapt.tau_cdf,
+                hist=state.adapt.hist,
+            ),
+        )
+        state, m1 = step(state, next(batches))
+        assert len(traces) == 1, "adapt table swap must not retrace the step"
+        # the compiled step gathered from the NEW table (same trace!)
+        assert float(m1["alpha_mean"]) == pytest.approx(0.10)
+
+    def test_host_refresh_changes_applied_alpha_same_trace(self, small_cfg):
+        """Full loop: constant-schedule start, host_refresh mid-run, the SAME
+        compiled step must pick up the refitted table."""
+        opt = sgd(0.05)
+        model = Poisson(2.0)
+        const = make_schedule("constant", 0.05, tau_max=31)
+        adapt = make_adapt(const, model, cdf_support=8, tau_max=31)
+        mts = mindthestep(opt, const, 0.05, m=4, tau_max=31)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=8, adapt=adapt
+        )
+        traces = []
+        base = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4)
+
+        def counting(s, b):
+            traces.append(1)
+            return base(s, b)
+
+        step = jax.jit(counting)
+        batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        for _ in range(10):
+            state, m_before = step(state, next(batches))
+        table_before = np.asarray(state.adapt.alpha_table)
+
+        state = dataclasses.replace(state, adapt=host_refresh(state.adapt, mts))
+        assert mts.schedule.name.startswith("poisson_momentum")
+        table_after = np.asarray(state.adapt.alpha_table)
+        assert not np.allclose(table_before, table_after), "refresh must change the table"
+        assert int(np.asarray(state.adapt.hist).sum()) == 0, "refresh drains the histogram"
+
+        state, m_after = step(state, next(batches))
+        assert len(traces) == 1, "host_refresh must not retrace the compiled step"
+        # the adaptive table is non-constant, so the gathered mean moved off
+        # the old constant alpha for any tau draw with spread
+        assert float(m_after["alpha_mean"]) != pytest.approx(0.05, rel=1e-4)
+
+    def test_refresh_shapes_are_invariant(self):
+        model = Poisson(3.0)
+        sched = make_schedule("poisson_momentum", 0.01, model, K=1.0, tau_max=63)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=63)
+        mts = mindthestep(sgd(0.01), sched, 0.01, m=4, tau_max=63)
+        adapt = record_taus(adapt, jnp.asarray([1, 2, 2, 3], jnp.int32))
+        new = host_refresh(adapt, mts, logger=None)
+        assert new.alpha_table.shape == adapt.alpha_table.shape
+        assert new.tau_cdf.shape == adapt.tau_cdf.shape
+        assert new.hist.shape == adapt.hist.shape
+
+    def test_sampler_cdf_fixed_by_default(self):
+        """The tau sampler models the ENVIRONMENT: refitting the policy must
+        not move it (regression for the self-referential truncation drift
+        where lambda chased its own ring-truncated samples downward)."""
+        model = Poisson(8.0)
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
+        mts = mindthestep(sgd(0.05), sched, 0.05, m=8, tau_max=31)
+        # observed taus biased low vs the environment (ring truncation)
+        adapt = record_taus(adapt, jnp.asarray([0, 1, 1, 2, 2, 2], jnp.int32))
+        new = host_refresh(adapt, mts, K=0.05, logger=None)
+        np.testing.assert_array_equal(
+            np.asarray(new.tau_cdf), np.asarray(adapt.tau_cdf)
+        )
+        # opt-in swap still available
+        adapt2 = record_taus(adapt, jnp.asarray([1, 1, 1], jnp.int32))
+        new2 = host_refresh(adapt2, mts, K=0.05, refresh_cdf=True, logger=None)
+        assert not np.allclose(np.asarray(new2.tau_cdf), np.asarray(adapt.tau_cdf))
+
+
+class TestHistogramParity:
+    """The in-jit scatter-add histogram must match host-side observe()."""
+
+    def test_record_matches_observe(self, key):
+        est = OnlineStalenessEstimator(m=4, tau_max=31)
+        adapt = init_adapt(np.ones(32), staleness_cdf(Poisson(5.0).pmf_table(31)))
+        rng = key
+        for _ in range(50):
+            rng, sub = jax.random.split(rng)
+            taus = sample_taus(sub, adapt.tau_cdf, 8)
+            adapt = record_taus(adapt, taus)
+            est.observe(np.asarray(taus))
+        np.testing.assert_array_equal(
+            np.asarray(adapt.hist), est.counts.astype(np.int64)
+        )
+
+    def test_train_loop_histogram_matches_host_replay(self, small_cfg):
+        """End-to-end: the histogram the step accumulates equals a host-side
+        replay of the rng chain — no tau ever crosses per-step."""
+        opt = sgd(0.05)
+        model = Poisson(4.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
+        W = 4
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
+        )
+        rng0 = state.rng
+        step = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=W))
+        batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        n_steps = 12
+        for _ in range(n_steps):
+            state, _ = step(state, next(batches))
+        # replay the tau draws on the host from the same rng chain
+        est = OnlineStalenessEstimator(m=4, tau_max=31)
+        rng = rng0
+        for _ in range(n_steps):
+            rng, sub = jax.random.split(rng)
+            est.observe(np.asarray(sample_taus(sub, adapt.tau_cdf, W)))
+        np.testing.assert_array_equal(
+            np.asarray(state.adapt.hist), est.counts.astype(np.int64)
+        )
+
+
+class TestBatchedRing:
+    """Vectorized delayed_apply_batch == a Python loop of the scalar version."""
+
+    def test_batch_matches_scalar_loop(self):
+        params = {"w": jnp.zeros((3,)), "b": jnp.zeros(())}
+        K, W, T = 6, 4, 10
+        rng = np.random.default_rng(0)
+        tau_seq = rng.integers(0, K + 2, size=(T, W))
+
+        st_b = init_delayed(params, K=K, dtype=jnp.float32)
+        st_s = init_delayed(params, K=K, dtype=jnp.float32)
+        for t in range(T):
+            g = {"w": jnp.full((3,), float(t + 1)), "b": jnp.float32(-(t + 1))}
+            taus = jnp.asarray(tau_seq[t], jnp.int32)
+            d_b, live_b, st_b = delayed_apply_batch(st_b, g, taus)
+
+            # scalar reference: W pops against the SAME post-push ring
+            d_ref, live_ref = [], []
+            st_after = None
+            for w in range(W):
+                d, live, st_after = delayed_apply(st_s, g, jnp.int32(tau_seq[t, w]))
+                d_ref.append(d)
+                live_ref.append(float(live))
+            st_s = st_after  # one push per tick, regardless of W
+
+            np.testing.assert_allclose(np.asarray(live_b), np.asarray(live_ref))
+            for leaf in ("w", "b"):
+                got = np.asarray(d_b[leaf])
+                want = np.stack([np.asarray(d[leaf]) for d in d_ref])
+                np.testing.assert_allclose(got, want)
+        np.testing.assert_array_equal(int(st_b.step), int(st_s.step))
+
+    def test_combine_is_weighted_sum(self):
+        params = {"w": jnp.zeros((2,))}
+        K, W = 4, 3
+        st = init_delayed(params, K=K, dtype=jnp.float32)
+        for t in range(5):
+            g = {"w": jnp.full((2,), float(t + 1))}
+            taus = jnp.asarray([0, 1, 2], jnp.int32)
+            weights = jnp.asarray([0.5, 0.25, 0.125], jnp.float32)
+            comb, live, st = delayed_combine(st, g, taus, weights)
+        # at t=4: g_{4-0}=5, g_{4-1}=4, g_{4-2}=3, all live
+        np.testing.assert_allclose(
+            np.asarray(comb["w"]),
+            (0.5 * 5 + 0.25 * 4 + 0.125 * 3) * np.ones(2),
+            rtol=1e-6,
+        )
+        np.testing.assert_allclose(np.asarray(live), 1.0)
+
+
+class TestEstimatorRefreshBoundary:
+    def test_fit_is_idempotent(self):
+        est = OnlineStalenessEstimator(m=4, tau_max=31, decay=0.5)
+        est.observe(np.array([1, 2, 2, 3, 4, 4, 4]))
+        before = est.counts.copy()
+        m1 = est.fit("poisson")
+        m2 = est.fit("poisson")
+        np.testing.assert_array_equal(est.counts, before)
+        assert m1.lam == pytest.approx(m2.lam)
+
+    def test_forget_applies_once_per_rebuild(self):
+        est = OnlineStalenessEstimator(m=4, tau_max=31, decay=0.5)
+        est.observe(np.full(100, 3))
+        total_before = est.counts.sum()
+        est.rebuild_schedule("poisson_momentum", 0.01, normalize=False)
+        assert est.counts.sum() == pytest.approx(total_before * 0.5)
+
+    def test_failed_rebuild_does_not_forget(self):
+        """A rebuild that raises (eq.-26 normalization with zero support)
+        must leave the histogram intact for the next attempt."""
+        est = OnlineStalenessEstimator(m=4, tau_max=31, decay=0.5)
+        est.observe(np.full(100, 3))
+        before = est.counts.copy()
+        with pytest.raises(ValueError):
+            est.rebuild_schedule("poisson_momentum", 0.01, K=1.0)  # E[alpha]=0
+        np.testing.assert_array_equal(est.counts, before)
+
+    def test_observe_counts_matches_observe(self):
+        a = OnlineStalenessEstimator(m=4, tau_max=15)
+        b = OnlineStalenessEstimator(m=4, tau_max=15)
+        taus = np.random.default_rng(0).poisson(4.0, size=500)
+        a.observe(taus)
+        counts = np.bincount(np.clip(taus, 0, 15), minlength=16)
+        b.observe_counts(counts)
+        np.testing.assert_allclose(a.counts, b.counts)
+        assert a.n_seen == b.n_seen
+
+    def test_observe_counts_folds_overflow(self):
+        est = OnlineStalenessEstimator(m=4, tau_max=3)
+        est.observe_counts(np.array([1, 1, 1, 1, 7, 7]))  # support 6 > 4
+        np.testing.assert_allclose(est.counts, [1, 1, 1, 15])
+
+
+class TestScheduleDeviceCache:
+    def test_device_table_cached(self):
+        sched = make_schedule("constant", 0.1, tau_max=8)
+        assert sched.device_table is sched.device_table  # one upload, cached
+        np.testing.assert_allclose(np.asarray(sched(jnp.arange(4))), 0.1)
+
+    def test_call_still_clips(self):
+        sched = make_schedule("constant", 0.1, tau_max=4)
+        assert float(sched(99)) == pytest.approx(float(sched.table[-1]))
+
+
+class TestFusedOptimizer:
+    def _tree(self, key):
+        ks = jax.random.split(key, 3)
+        return {
+            "a": jax.random.normal(ks[0], (16, 8)),
+            "b": {"c": jax.random.normal(ks[1], (33,)),
+                  "d": jax.random.normal(ks[2], ())},
+        }
+
+    def test_pack_unpack_roundtrip(self, key):
+        tree = self._tree(key)
+        flat = pack_flat(tree)
+        assert flat.shape == (16 * 8 + 33 + 1,)
+        back = unpack_flat(flat, tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+    def test_fused_matches_unfused_trajectory(self, key):
+        params = self._tree(key)
+        grads = jax.tree.map(lambda p: p * 0.1, params)
+        ref, fus = momentum(0.05, 0.9), momentum(0.05, 0.9, fused=True)
+        pr, sr = params, ref.init(params)
+        pf, sf = params, fus.init(params)
+        for _ in range(5):
+            pr, sr = ref.update(grads, sr, pr, scale=0.5)
+            pf, sf = fus.update(grads, sf, pf, scale=0.5)
+        for x, y in zip(jax.tree.leaves(pr), jax.tree.leaves(pf)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6, atol=1e-7)
+        # velocities agree too (fused keeps them flat)
+        np.testing.assert_allclose(
+            np.asarray(pack_flat(sr)), np.asarray(sf), rtol=1e-6, atol=1e-7
+        )
+
+    def test_fused_accepts_flat_gradient(self, key):
+        params = self._tree(key)
+        grads = jax.tree.map(lambda p: p * 0.1, params)
+        fus = momentum(0.05, 0.9, fused=True)
+        p1, _ = fus.update(grads, fus.init(params), params)
+        p2, _ = fus.update(pack_flat(grads), fus.init(params), params)
+        for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+    def test_async_step_with_fused_momentum(self, small_cfg):
+        """The fused apply path composes with the adaptive async step."""
+        opt = momentum(0.05, 0.9, fused=True)
+        model = Poisson(2.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=8, tau_max=31)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=8, adapt=adapt
+        )
+        step = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=2))
+        batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        for _ in range(6):
+            state, m = step(state, next(batches))
+        assert bool(jnp.isfinite(m["loss"]))
+        assert state.opt_state.ndim == 1  # velocity is flat-resident
+
+
+class TestSyncStepThreadsAdapt:
+    def test_sync_step_preserves_adapt(self, small_cfg):
+        """make_train_step must carry TrainState.adapt through (regression:
+        it used to fall back to the dataclass default None after one step)."""
+        from repro.training import make_train_step
+
+        opt = sgd(0.05)
+        model = Poisson(2.0)
+        sched = make_schedule("constant", 0.05, tau_max=15)
+        adapt = make_adapt(sched, model, cdf_support=8, tau_max=15)
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt, adapt=adapt)
+        step = jax.jit(make_train_step(small_cfg, opt))
+        state, _ = step(state, next(lm_batches(small_cfg.vocab_size, 2, 16, seed=0)))
+        assert state.adapt is not None
+        np.testing.assert_allclose(
+            np.asarray(state.adapt.alpha_table), np.asarray(adapt.alpha_table)
+        )
+
+
+class TestLoopNoPerStepSync:
+    def test_refresh_every_drains_and_refits(self, small_cfg):
+        opt = sgd(0.05)
+        model = Poisson(3.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
+        mts = mindthestep(opt, sched, 0.05, m=3, tau_max=31)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
+        )
+        step = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4)
+        W, n_steps, every = 4, 20, 5
+        state, _ = train_loop(
+            step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
+            num_steps=n_steps, log_every=10, mts=mts, refresh_every=every,
+        )
+        # every sampled tau reached the estimator through histogram drains
+        assert mts.estimator.n_seen == W * n_steps
+        # last drain was at step 20 -> in-jit histogram is empty again
+        assert int(np.asarray(state.adapt.hist).sum()) == 0

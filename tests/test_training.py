@@ -15,7 +15,9 @@ from repro.core.step_size import make_schedule
 from repro.data import classification_batches, lm_batches, make_batch_for
 from repro.optim import sgd
 from repro.training import (
+    init_adapt,
     init_train_state,
+    make_adapt,
     make_async_train_step,
     make_serve_step,
     make_train_step,
@@ -76,34 +78,38 @@ class TestSteps:
         opt = sgd(0.05)
         model = Poisson(4.0)
         sched = make_schedule("poisson_momentum", 0.05, model, K=1.0)
-        cdf = staleness_cdf(model.pmf_table(15))
-        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt, async_ring=16)
-        step = jax.jit(make_async_train_step(
-            small_cfg, opt, jnp.asarray(sched.table, jnp.float32), 0.05, cdf
-        ))
-        taus = []
+        adapt = make_adapt(sched, model, cdf_support=16)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
+        )
+        step = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4))
+        tau_means = []
         batches = lm_batches(small_cfg.vocab_size, 4, 32, seed=0)
         for _ in range(20):
             state, m = step(state, next(batches))
-            taus.append(int(m["tau"]))
-        assert np.mean(taus) == pytest.approx(4.0, abs=2.0)
+            tau_means.append(float(m["tau_mean"]))
+        assert np.mean(tau_means) == pytest.approx(4.0, abs=2.0)
         assert bool(jnp.isfinite(m["loss"]))
+        # the in-jit histogram saw every sampled tau: 20 steps x 4 workers
+        assert int(np.asarray(state.adapt.hist).sum()) == 80
 
     def test_async_warmup_drops(self, small_cfg):
         """live == 0 until the ring holds the requested delay."""
         opt = sgd(0.05)
         model = Poisson(8.0)
         sched = make_schedule("poisson_momentum", 0.05, model, K=1.0)
-        cdf = staleness_cdf(np.eye(16)[8])  # tau == 8 always
-        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt, async_ring=16)
-        step = jax.jit(make_async_train_step(
-            small_cfg, opt, jnp.asarray(sched.table, jnp.float32), 0.05, cdf
-        ))
+        adapt = init_adapt(
+            sched.table, staleness_cdf(np.eye(16)[8])
+        )  # cdf forces tau == 8 always
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
+        )
+        step = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=2))
         batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
         lives = []
         for _ in range(10):
             state, m = step(state, next(batches))
-            lives.append(float(m["live"]))
+            lives.append(float(m["live_frac"]))
         assert lives[:8] == [0.0] * 8
         assert lives[8] == 1.0
 
