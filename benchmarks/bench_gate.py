@@ -1,0 +1,111 @@
+"""Benchmark regression gate: compare BENCH_*.json against blessed baselines.
+
+    PYTHONPATH=src python -m benchmarks.bench_gate \
+        --current bench-out --baselines benchmarks/baselines [--tolerance 0.25]
+
+For every baseline file the same-named current file must exist; for every
+baseline row carrying ``meta.gate`` the current run must not regress by more
+than the row's tolerance band (``meta.tol``, else ``--tolerance``):
+
+* ``gate: "higher"`` (speedups) — fail when current < baseline * (1 - tol);
+* ``gate: "lower"``  (wall-clock) — fail when current > baseline * (1 + tol).
+
+Rows are matched by ``name`` AND ``config`` hash — a configuration change
+makes the comparison meaningless, so it is reported as a skip (re-bless the
+baseline, see README "Scenario matrix & benchmark gating").  Exit is nonzero
+on any regression or missing file/row.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+
+from repro.bench_schema import read_bench_json
+
+
+def compare_rows(baseline: list[dict], current: list[dict], default_tol: float):
+    """Returns (failures, checked, skipped) comparing gated baseline rows."""
+    cur = {r["name"]: r for r in current}
+    failures, checked, skipped = [], [], []
+    for row in baseline:
+        meta = row.get("meta") or {}
+        gate = meta.get("gate")
+        if gate is None:
+            continue
+        name = row["name"]
+        if name not in cur:
+            failures.append(f"{name}: missing from current run")
+            continue
+        c = cur[name]
+        if c["config"] != row["config"]:
+            skipped.append(
+                f"{name}: config changed "
+                f"({row['config']} -> {c['config']}) — re-bless the baseline"
+            )
+            continue
+        tol = float(meta.get("tol", default_tol))
+        base_v, cur_v = float(row["value"]), float(c["value"])
+        if gate == "higher":
+            bound = base_v * (1.0 - tol)
+            bad = cur_v < bound
+            direction = ">="
+        else:
+            bound = base_v * (1.0 + tol)
+            bad = cur_v > bound
+            direction = "<="
+        verdict = "FAIL" if bad else "ok"
+        checked.append(
+            f"[{verdict}] {name}: {cur_v:.4g} {c['unit']} "
+            f"(baseline {base_v:.4g}, require {direction} {bound:.4g})"
+        )
+        if bad:
+            failures.append(
+                f"{name}: {cur_v:.4g} {c['unit']} regressed past the "
+                f"{tol:.0%} band around baseline {base_v:.4g}"
+            )
+    return failures, checked, skipped
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="directory with fresh BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="default relative tolerance band (meta.tol overrides per row)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline_files = sorted(glob.glob(os.path.join(args.baselines, "BENCH_*.json")))
+    if not baseline_files:
+        raise SystemExit(f"no baselines found under {args.baselines}")
+
+    all_failures = []
+    for bf in baseline_files:
+        fname = os.path.basename(bf)
+        cf = os.path.join(args.current, fname)
+        print(f"\n== {fname} ==")
+        if not os.path.exists(cf):
+            all_failures.append(f"{fname}: not produced by the current run")
+            print(f"  [FAIL] {fname} missing from {args.current}")
+            continue
+        failures, checked, skipped = compare_rows(
+            read_bench_json(bf), read_bench_json(cf), args.tolerance
+        )
+        for line in checked:
+            print(f"  {line}")
+        for line in skipped:
+            print(f"  [skip] {line}")
+        all_failures.extend(f"{fname}: {f}" for f in failures)
+
+    if all_failures:
+        raise SystemExit("bench-gate: regressions detected:\n  " + "\n  ".join(all_failures))
+    print("\nbench-gate: all gated benchmarks within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,14 +20,20 @@ from repro.launch.mesh import HARDWARE
 
 
 def _time(fn, *args, reps: int = 3) -> float:
+    """Best-of-reps wall time in us. The MIN is the noise-robust statistic
+    for micro-benches (scheduler preemption only ever ADDS time) — the mean
+    swung the fused-apply speedup 6x-9x run-to-run on a busy CI box, which
+    no regression tolerance band can absorb."""
     fn(*args)  # compile/warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
-def fused_apply_bench(reps: int = 20) -> dict:
+def fused_apply_bench(reps: int = 60) -> dict:
     """Fused flat-buffer server apply vs unfused per-leaf tree.map apply.
 
     Interpret mode is OFF on both sides.  Two numbers are reported honestly:
@@ -191,9 +197,43 @@ def run() -> list[dict]:
     return rows
 
 
-def main(fast: bool = False) -> None:
+def bench_rows(rows: list[dict] | None = None) -> list[dict]:
+    """Schema rows (repro.bench_schema) from the kernel micro-bench.
+
+    Only the fused-apply speedups are regression-gated ("higher", 25% band) —
+    interpret-mode wall times and analytic rooflines are informational.
+    """
+    from repro.bench_schema import bench_row
+
+    out = []
+    for r in rows if rows is not None else run():
+        config = {"kernel": r["kernel"], "shape": r["shape"], "note": r["note"]}
+        base = f"kernels/{r['kernel'].replace(' ', '_')}"
+        if "speedup" in r:
+            out.append(
+                bench_row(f"{base}/speedup", r["speedup"], "x", config,
+                          gate="higher", tol=0.25)
+            )
+            # the round-trip number hovers near 1x and swings 3x with CPU
+            # scheduler noise — informational only, never gated
+            out.append(
+                bench_row(f"{base}/speedup_roundtrip", r["speedup_roundtrip"], "x", config)
+            )
+            out.append(bench_row(f"{base}/t_fused_us", r["t_fused_us"], "us", config))
+            out.append(bench_row(f"{base}/t_unfused_us", r["t_unfused_us"], "us", config))
+            continue
+        out.append(bench_row(f"{base}/t_kernel_us", r["t_kernel_us"], "us", config))
+        out.append(bench_row(f"{base}/t_ref_us", r["t_ref_us"], "us", config))
+        out.append(
+            bench_row(f"{base}/tpu_roofline_ms", r["tpu_roofline_ms"], "ms", config)
+        )
+    return out
+
+
+def main(fast: bool = False) -> list[dict]:
     print("== Pallas kernels: interpret-mode check + TPU v5e roofline ==")
-    for r in run():
+    rows = run()
+    for r in rows:
         if "speedup" in r:
             print(f"  {r['kernel']:<17} {r['shape']:<28} fused {r['t_fused_us']:>8.0f}us "
                   f"unfused {r['t_unfused_us']:>8.0f}us  {r['speedup']:.2f}x  [{r['note']}]")
@@ -207,6 +247,7 @@ def main(fast: bool = False) -> None:
         if "tpu_unfused_ms" in r:
             print(f"  {'':<17} {'':<14} unfused tpu~{r['tpu_unfused_ms']:.2f}ms "
                   f"-> fusion saves {r['tpu_unfused_ms'] - r['tpu_roofline_ms']:.2f}ms/update")
+    return bench_rows(rows)
 
 
 if __name__ == "__main__":

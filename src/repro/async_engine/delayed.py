@@ -28,11 +28,14 @@ import numpy as np
 
 __all__ = [
     "DelayedGradients",
+    "WorkerRing",
     "init_delayed",
+    "init_worker_ring",
     "sample_tau",
     "delayed_apply",
     "delayed_apply_batch",
     "delayed_combine",
+    "worker_ring_combine",
     "staleness_cdf",
 ]
 
@@ -125,6 +128,82 @@ def delayed_apply_batch(
     live = ((src_step >= 0) & (taus < K)).astype(jnp.float32)
     delayed = jax.tree.map(lambda r: jnp.take(r, src_slot, axis=0), ring)
     return delayed, live, DelayedGradients(ring=ring, step=t + 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class WorkerRing:
+    """Per-worker delayed-gradient rings for the sharded async engine.
+
+    ring: pytree of (W, K, ...) arrays — worker ``w``'s slot ``t % K`` holds
+          the gradient of step ``t``.  The leading worker axis is sharded over
+          the ``workers`` mesh axis (see :func:`repro.sharding.specs
+          .worker_specs`); under ``shard_map`` each device owns a (W_local, K,
+          ...) block and the weighted combine is psum-merged across shards.
+    step: int32 scalar, replicated — one push per server tick.
+    """
+
+    ring: Any
+    step: jnp.ndarray
+
+
+def init_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> WorkerRing:
+    ring = jax.tree.map(lambda p: jnp.zeros((W, K) + p.shape, dtype), params)
+    return WorkerRing(ring=ring, step=jnp.zeros((), jnp.int32))
+
+
+def worker_ring_combine(
+    ring: Any,  # pytree of LOCAL (Wl, K, ...) blocks
+    step: jnp.ndarray,
+    new_grad: Any,
+    taus: jnp.ndarray,  # (Wl,) int32
+    weights: jnp.ndarray,  # (Wl,)
+    *,
+    axis_name: str | None = None,
+) -> tuple[Any, jnp.ndarray, Any]:
+    """One server tick over a local block of worker rings (shard_map body).
+
+    Pushes ``new_grad`` into every local worker's ring, pops worker ``w``'s
+    gradient from ``taus[w]`` steps ago, and returns the weighted partial sum
+
+        g_partial = sum_w weights[w] * live[w] * g_{t - taus[w]}
+
+    psum-reduced over ``axis_name`` when given (the cross-shard merge of the
+    sharded engine), so every shard leaves with the same global ``g_eff``.
+    Each worker ring receives identical pushes — under async-as-delay every
+    worker observes the same gradient stream, so the W_local-fold storage is
+    redundant TODAY; it is kept because (a) the worker axis is what lets the
+    rings diverge later (per-worker gradient noise, partial-failure replay)
+    without touching this contraction, and (b) it buys a shard-local gather
+    with no cross-worker communication until the single psum.  On a 1-device
+    mesh this reproduces :func:`delayed_combine` bit-exactly (same gather
+    values, same tensordot contraction).
+    """
+    K = jax.tree.leaves(ring)[0].shape[1]
+    Wl = taus.shape[0]
+    slot = jnp.mod(step, K)
+    ring = jax.tree.map(
+        lambda r, g: jax.lax.dynamic_update_index_in_dim(
+            r, jnp.broadcast_to(g.astype(r.dtype), (Wl,) + g.shape), slot, axis=1
+        ),
+        ring,
+        new_grad,
+    )
+    src_step = step - taus
+    src_slot = jnp.mod(src_step, K)
+    live = ((src_step >= 0) & (taus < K)).astype(jnp.float32)
+    w = (jnp.asarray(weights, jnp.float32) * live).astype(jnp.float32)
+
+    def combine_leaf(r):
+        # per-worker pop: rows[w] = r[w, src_slot[w]]
+        rows = jax.vmap(
+            lambda rw, s: jax.lax.dynamic_index_in_dim(rw, s, axis=0, keepdims=False)
+        )(r, src_slot)
+        partial = jnp.tensordot(w, rows.astype(jnp.float32), axes=1)
+        return jax.lax.psum(partial, axis_name) if axis_name is not None else partial
+
+    combined = jax.tree.map(combine_leaf, ring)
+    return combined, live, ring
 
 
 def delayed_combine(

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_small_mesh", "HARDWARE"]
+__all__ = ["make_production_mesh", "make_small_mesh", "make_workers_mesh", "HARDWARE"]
 
 # TPU v5e hardware constants used by the roofline analysis.
 HARDWARE = {
@@ -31,3 +31,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_small_mesh(data: int = 2, model: int = 4):
     """Reduced mesh for CI dry-run tests (8 fake host devices)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_workers_mesh(devices: int | None = None):
+    """1-D ``workers`` mesh for the sharded async engine.
+
+    ``devices`` defaults to every local device; the simulated worker count W
+    must be a multiple of it (each device shard owns ``W / devices`` worker
+    rings/samplers/histograms under ``shard_map``).  On the CI CPU this is a
+    1-device mesh — the sharded step then reproduces the single-shard
+    trajectory bit-exactly (regression-tested in tests/test_scenarios.py).
+    """
+    n = jax.local_device_count() if devices is None else devices
+    return jax.make_mesh((n,), ("workers",))

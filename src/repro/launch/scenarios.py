@@ -1,0 +1,230 @@
+"""Scenario-matrix runner: {arch} x {staleness model} x {adaptive strategy}.
+
+    PYTHONPATH=src python -m repro.launch.scenarios --smoke
+    PYTHONPATH=src python -m repro.launch.scenarios \
+        --archs stablelm-1.6b,qwen2-moe-a2.7b --staleness geometric,cmp,trace \
+        --strategies fixed,eq17,eq26 --steps 20 --out BENCH_scenarios.json
+
+Each cell trains a reduced config for a few steps through the SHARDED async
+engine (per-worker rings + heterogeneous tau samplers under ``shard_map``
+over the ``workers`` mesh axis) and emits one ``BENCH_scenarios.json`` row
+group per cell: final loss with the full loss-vs-updates series in ``meta``,
+wall-clock, and the jit retrace count (an online-adaptation regression would
+show up here as retraces > 1 per cell).
+
+Staleness models are heterogeneous ACROSS workers within each family —
+per-worker geometric p / Poisson lambda / CMP nu spreads, and per-worker
+event-simulator traces for ``trace`` — exercising exactly the model- and
+scale-dependence the single-sampler harness could not.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.async_engine.events import EventSimConfig, simulate_staleness_trace
+from repro.bench_schema import bench_row, write_bench_json
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.core.staleness import CMP, Geometric, Poisson
+from repro.core.step_size import make_schedule
+from repro.data import make_batch_for
+from repro.launch.mesh import make_workers_mesh
+from repro.optim import sgd
+from repro.training import (
+    init_sharded_async_state,
+    make_sharded_async_train_step,
+    make_worker_adapt,
+)
+
+STALENESS_FAMILIES = ("geometric", "poisson", "cmp", "trace")
+STRATEGY_CHOICES = ("fixed", "eq17", "eq26")
+
+SMOKE_ARCHS = ("stablelm-1.6b", "recurrentgemma-9b")
+SMOKE_STALENESS = ("geometric", "trace")
+SMOKE_STRATEGIES = ("eq26",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCell:
+    arch: str
+    staleness: str
+    strategy: str
+    workers: int = 4
+    ring: int = 8
+    steps: int = 6
+    batch: int = 2
+    seq: int = 16
+    d_model: int = 128
+    lr: float = 0.05
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"scenarios/{self.arch}/{self.staleness}/{self.strategy}"
+
+    def config(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def worker_models(cell: ScenarioCell) -> list:
+    """Heterogeneous per-worker staleness samplers for one cell."""
+    W, m = cell.workers, float(cell.workers)
+    if cell.staleness == "geometric":
+        # mean staleness spread ~ [m/2, 3m/2] across workers: p = 1/(1+mean)
+        means = np.linspace(0.5 * m, 1.5 * m, W)
+        return [Geometric(p=1.0 / (1.0 + mu)) for mu in means]
+    if cell.staleness == "poisson":
+        return [Poisson(lam=lam) for lam in np.linspace(0.5 * m, 1.5 * m, W)]
+    if cell.staleness == "cmp":
+        # fixed mode m (eq. 13), per-worker decay rate nu
+        return [CMP.from_mode(cell.workers, nu) for nu in np.linspace(0.7, 1.6, W)]
+    if cell.staleness == "trace":
+        # event-simulated traces, one per worker (distinct seeds + jitter)
+        return [
+            simulate_staleness_trace(
+                EventSimConfig(m=cell.workers, jitter=0.01 * w),
+                num_updates=256,
+                seed=cell.seed + 17 * w,
+            )
+            for w in range(W)
+        ]
+    raise ValueError(f"unknown staleness family {cell.staleness!r}")
+
+
+def cell_schedule(cell: ScenarioCell):
+    """fixed / eq.-17 / eq.-26-normalized step-size schedule for one cell."""
+    tau_max = 4 * cell.ring
+    if cell.strategy == "fixed":
+        return make_schedule("constant", cell.lr, tau_max=tau_max)
+    model = Poisson(float(cell.workers))
+    if cell.strategy == "eq17":
+        return make_schedule("poisson_momentum", cell.lr, model, K=cell.lr, tau_max=tau_max)
+    if cell.strategy == "eq26":
+        pmf = model.pmf_table(cell.ring - 1)
+        return make_schedule(
+            "poisson_momentum", cell.lr, model, K=cell.lr,
+            tau_max=tau_max, normalize_pmf=pmf / np.sum(pmf),
+        )
+    raise ValueError(f"unknown strategy {cell.strategy!r}")
+
+
+def run_cell(cell: ScenarioCell, mesh=None) -> list[dict]:
+    """Train one matrix cell; returns its BENCH rows."""
+    mesh = make_workers_mesh() if mesh is None else mesh
+    cfg = reduced(get_config(cell.arch), d_model=cell.d_model)
+    opt = sgd(cell.lr)
+    sched = cell_schedule(cell)
+    adapt = make_worker_adapt(
+        sched.table, worker_models(cell), cdf_support=cell.ring
+    )
+    state = init_sharded_async_state(
+        jax.random.PRNGKey(cell.seed), cfg, opt, ring=cell.ring, adapt=adapt, mesh=mesh
+    )
+
+    retraces = []
+    base = make_sharded_async_train_step(cfg, opt, alpha_c=cell.lr, mesh=mesh)
+
+    def counting(s, b):
+        retraces.append(1)  # runs only when jax (re)traces
+        return base(s, b)
+
+    step = jax.jit(counting)
+    t0 = time.perf_counter()
+    losses = []
+    for t in range(cell.steps):
+        batch = make_batch_for(cfg, batch=cell.batch, seq=cell.seq, seed=cell.seed + t)
+        state, metrics = step(state, batch)
+        losses.append(float(np.asarray(metrics["loss"])))
+    wall_s = time.perf_counter() - t0
+
+    config = cell.config()
+    return [
+        bench_row(
+            f"{cell.name}/final_loss", losses[-1], "nll", config,
+            losses=losses, updates=list(range(1, cell.steps + 1)),
+            tau_mean=float(np.asarray(metrics["tau_mean"])),
+            live_frac=float(np.asarray(metrics["live_frac"])),
+        ),
+        bench_row(f"{cell.name}/wall_s", wall_s, "s", config),
+        # noise-free count: ANY retrace beyond the first compile is an
+        # online-adaptation regression (tables must stay step inputs)
+        bench_row(f"{cell.name}/retraces", len(retraces), "count", config,
+                  gate="lower", tol=0.0),
+    ]
+
+
+def run_matrix(cells: list[ScenarioCell], out: str, logger=print) -> list[dict]:
+    mesh = make_workers_mesh()
+    rows: list[dict] = []
+    failures: list[str] = []
+    for cell in cells:
+        t0 = time.perf_counter()
+        try:
+            cell_rows = run_cell(cell, mesh)
+        except Exception as e:  # noqa: BLE001 — matrix must report every cell
+            failures.append(f"{cell.name}: {e!r}")
+            logger(f"!! {cell.name} FAILED: {e!r}")
+            continue
+        rows.extend(cell_rows)
+        logger(
+            f"{cell.name:<56} loss {cell_rows[0]['value']:.4f} "
+            f"wall {cell_rows[1]['value']:5.1f}s retraces {int(cell_rows[2]['value'])}"
+        )
+    write_bench_json(out, rows)
+    logger(f"wrote {len(rows)} rows ({len(rows) // 3} cells) -> {out}")
+    if failures:
+        raise SystemExit("scenario cells failed:\n  " + "\n  ".join(failures))
+    return rows
+
+
+def build_cells(args) -> list[ScenarioCell]:
+    return [
+        ScenarioCell(
+            arch=a, staleness=s, strategy=st,
+            workers=args.workers, ring=args.ring, steps=args.steps,
+            batch=args.batch, seq=args.seq, lr=args.lr, seed=args.seed,
+        )
+        for a in args.archs
+        for s in args.staleness
+        for st in args.strategies
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--archs", default=",".join(SMOKE_ARCHS))
+    ap.add_argument("--staleness", default=",".join(SMOKE_STALENESS))
+    ap.add_argument("--strategies", default=",".join(SMOKE_STRATEGIES))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--ring", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true", help="CI cell set (2 archs x 2 models)")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.archs = ",".join(SMOKE_ARCHS)
+        args.staleness = ",".join(SMOKE_STALENESS)
+        args.strategies = ",".join(SMOKE_STRATEGIES)
+    args.archs = [a for a in args.archs.split(",") if a]
+    args.staleness = [s for s in args.staleness.split(",") if s]
+    args.strategies = [s for s in args.strategies.split(",") if s]
+    for a in args.archs:
+        assert a in ASSIGNED_ARCHS, f"unknown arch {a!r}"
+    for s in args.staleness:
+        assert s in STALENESS_FAMILIES, f"unknown staleness family {s!r}"
+    for s in args.strategies:
+        assert s in STRATEGY_CHOICES, f"unknown strategy {s!r}"
+    run_matrix(build_cells(args), args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,10 @@
 """Serving launcher: prefill a batch of prompts, then greedy-decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --reduced \
-        --batch 4 --prompt_len 32 --gen 16
+        --batch 4 --prompt_len 32 --gen 16 [--json BENCH_serve.json]
+
+``--json`` writes the prefill/decode timings as bench.v1 rows (see
+repro.bench_schema) so the serve smoke can join the CI bench-gate.
 """
 
 from __future__ import annotations
@@ -26,6 +29,8 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write timings as bench.v1 rows to PATH")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,7 +40,7 @@ def main():
     params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
     batch = make_batch_for(cfg, batch=args.batch, seq=args.prompt_len, seed=args.seed)
 
-    t0 = time.perf_counter()
+    t_prefill0 = time.perf_counter()
     if cfg.is_encoder_decoder:
         cache = M.init_decode_state(params, cfg, args.batch, capacity,
                                     cache_dtype=jnp.float32, batch=batch)
@@ -45,7 +50,8 @@ def main():
         logits, cache = M.prefill(params, batch, cfg, capacity, cache_dtype=jnp.float32)
         last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         start_pos = args.prompt_len
-    print(f"prefill: {time.perf_counter() - t0:.2f}s")
+    t_prefill = time.perf_counter() - t_prefill0
+    print(f"prefill: {t_prefill:.2f}s")
 
     serve = jax.jit(make_serve_step(cfg))
     outs = [last]
@@ -59,6 +65,18 @@ def main():
     print(f"decode: {args.gen} steps x batch {args.batch} in {dt:.2f}s "
           f"({args.gen * args.batch / dt:.1f} tok/s)")
     print("generated token ids [0]:", toks[0].tolist())
+    if args.json:
+        from repro.bench_schema import bench_row, write_bench_json
+
+        config = {"arch": args.arch, "batch": args.batch, "prompt_len": args.prompt_len,
+                  "gen": args.gen, "reduced": args.reduced, "seed": args.seed}
+        base = f"serve/{args.arch}"
+        write_bench_json(args.json, [
+            bench_row(f"{base}/prefill_s", t_prefill, "s", config),
+            bench_row(f"{base}/decode_s", dt, "s", config),
+            bench_row(f"{base}/tok_per_s", args.gen * args.batch / dt, "tok/s", config),
+        ])
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -32,21 +32,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import Params, _act, truncated_normal
-from repro.sharding.ctx import current_rules
-
-
-def _shard_map(fun, *, mesh, in_specs, out_specs, check_vma=False):
-    """jax.shard_map across jax versions: older releases ship it under
-    ``jax.experimental.shard_map``, and the replication-check flag was
-    renamed ``check_rep`` -> ``check_vma`` independently of the top-level
-    promotion — so feature-detect the kwarg, not just the attribute."""
-    import inspect
-
-    sm = getattr(jax, "shard_map", None)
-    if sm is None:
-        from jax.experimental.shard_map import shard_map as sm
-    flag = "check_vma" if "check_vma" in inspect.signature(sm).parameters else "check_rep"
-    return sm(fun, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{flag: check_vma})
+from repro.sharding.ctx import current_rules, shard_map_compat
 
 
 def init_moe(key, cfg) -> Params:
@@ -191,7 +177,7 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]
             }
 
             @functools.partial(
-                _shard_map,
+                shard_map_compat,
                 mesh=mesh,
                 in_specs=(wspec, bspec),
                 out_specs=(bspec, P()),
@@ -231,7 +217,7 @@ def apply_moe(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]
             }
 
             @functools.partial(
-                _shard_map,
+                shard_map_compat,
                 mesh=mesh,
                 in_specs=(wspec, bspec),
                 out_specs=(bspec, P()),

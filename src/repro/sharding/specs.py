@@ -29,6 +29,8 @@ __all__ = [
     "tree_shardings",
     "batch_shape_structs",
     "batch_specs",
+    "worker_specs",
+    "worker_shardings",
     "SPEC_OPTIONS",
 ]
 
@@ -154,6 +156,33 @@ def tree_specs(tree: Any, mesh: Mesh) -> Any:
 
 def tree_shardings(tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda spec: NamedSharding(mesh, spec), tree_specs(tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Worker-axis specs (sharded async engine)
+# ---------------------------------------------------------------------------
+
+def worker_specs(tree: Any, mesh: Mesh, axis: str = "workers") -> Any:
+    """Spec every leaf's LEADING dim over the ``workers`` mesh axis.
+
+    The sharded async engine (per-worker delayed rings, tau-sampler tables,
+    staleness histograms) stacks worker state on axis 0; under ``shard_map``
+    each device owns ``W / |workers|`` simulated workers.  Falls back to
+    replication when the mesh has no ``workers`` axis or the leading dim does
+    not divide it.
+    """
+
+    def one(leaf) -> P:
+        shape = tuple(getattr(leaf, "shape", ()))
+        if not shape or axis not in mesh.axis_names or not _fits(shape[0], mesh, axis):
+            return P()
+        return P(*((axis,) + (None,) * (len(shape) - 1)))
+
+    return jax.tree.map(one, tree)
+
+
+def worker_shardings(tree: Any, mesh: Mesh, axis: str = "workers") -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), worker_specs(tree, mesh, axis))
 
 
 # ---------------------------------------------------------------------------

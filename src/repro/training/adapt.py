@@ -33,13 +33,20 @@ from repro.async_engine.delayed import staleness_cdf
 
 __all__ = [
     "AdaptState",
+    "WorkerAdaptState",
     "init_adapt",
     "make_adapt",
+    "make_worker_adapt",
+    "worker_sampler_tables",
     "default_adapt_setup",
     "sample_taus",
+    "sample_worker_taus",
     "alpha_lookup",
     "record_taus",
+    "record_worker_taus",
+    "merge_worker_hist",
     "host_refresh",
+    "worker_host_refresh",
 ]
 
 
@@ -109,6 +116,91 @@ def default_adapt_setup(alpha_c: float, workers: int, ring: int, *, tau_max: int
 
 
 # ---------------------------------------------------------------------------
+# Sharded-engine state: per-worker samplers + histograms over a workers axis
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class WorkerAdaptState:
+    """Adaptation state with a leading worker axis (sharded async engine).
+
+    The *policy* (``alpha_table``) stays global/replicated — the paper's
+    ``alpha(tau)`` is a property of the server, not of any worker.  The
+    *environment* is per-worker and heterogeneous: worker ``w`` draws its
+    staleness either from its own inverse-CDF row ``tau_cdf[w]`` (geometric /
+    Poisson / CMP fits) or by replaying its own recorded trace row
+    ``tau_trace[w]`` (event-simulator or production traces), selected by
+    ``use_trace[w]``.  ``hist`` keeps one histogram row per worker,
+    scatter-added in-jit and psum-merged only at ``host_refresh`` boundaries.
+
+    All worker-axis leaves shard over the ``workers`` mesh axis; shapes are
+    refresh-invariant exactly like :class:`AdaptState`.
+    """
+
+    alpha_table: jnp.ndarray  # (tau_max + 1,) f32, replicated
+    tau_cdf: jnp.ndarray  # (W, S) f32 — per-worker inverse-CDF rows
+    tau_trace: jnp.ndarray  # (W, T) i32 — per-worker replay traces
+    use_trace: jnp.ndarray  # (W,) i32 — 1 where the worker replays its trace
+    hist: jnp.ndarray  # (W, tau_max + 1) i32 — per-worker histograms
+
+    @property
+    def tau_max(self) -> int:
+        return self.alpha_table.shape[0] - 1
+
+    @property
+    def num_workers(self) -> int:
+        return self.tau_cdf.shape[0]
+
+
+def worker_sampler_tables(
+    samplers: list, *, support: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack heterogeneous per-worker tau samplers into fixed-shape tables.
+
+    ``samplers[w]`` is either a :class:`~repro.core.staleness.StalenessModel`
+    (sampled via its ring-truncated inverse CDF over ``[0, support)``) or a
+    1-D integer array (a staleness *trace*, e.g. from
+    :func:`repro.async_engine.events.simulate_staleness_trace`, replayed
+    cyclically).  Returns ``(tau_cdf (W, S), tau_trace (W, T), use_trace (W,))``
+    with traces tiled to the longest trace length (min 1).
+    """
+    from repro.core.staleness import StalenessModel
+
+    T = 1
+    for s in samplers:
+        if not isinstance(s, StalenessModel):
+            T = max(T, len(np.asarray(s)))
+    cdfs, traces, flags = [], [], []
+    for s in samplers:
+        if isinstance(s, StalenessModel):
+            cdfs.append(np.asarray(staleness_cdf(s.pmf_table(support - 1)), np.float32))
+            traces.append(np.zeros(T, np.int32))
+            flags.append(0)
+        else:
+            tr = np.asarray(s, np.int64).ravel()
+            assert tr.size > 0, "empty staleness trace"
+            reps = -(-T // tr.size)  # ceil division
+            traces.append(np.tile(tr, reps)[:T].astype(np.int32))
+            cdfs.append(np.ones(support, np.float32))  # degenerate (unused): tau = 0
+            flags.append(1)
+    return np.stack(cdfs), np.stack(traces), np.asarray(flags, np.int32)
+
+
+def make_worker_adapt(alpha_table, samplers: list, *, cdf_support: int) -> WorkerAdaptState:
+    """Build a :class:`WorkerAdaptState` from a table + per-worker samplers."""
+    at = jnp.asarray(alpha_table, jnp.float32)
+    cdf, trace, flags = worker_sampler_tables(samplers, support=cdf_support)
+    W = len(samplers)
+    return WorkerAdaptState(
+        alpha_table=at,
+        tau_cdf=jnp.asarray(cdf),
+        tau_trace=jnp.asarray(trace),
+        use_trace=jnp.asarray(flags),
+        hist=jnp.zeros((W,) + at.shape, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # In-jit primitives
 # ---------------------------------------------------------------------------
 
@@ -140,6 +232,34 @@ def record_taus(adapt: AdaptState, taus: jnp.ndarray) -> AdaptState:
         tau_cdf=adapt.tau_cdf,
         hist=adapt.hist.at[idx].add(1),
     )
+
+
+def sample_worker_taus(
+    u: jnp.ndarray,  # (Wl,) uniforms, one per local worker
+    tau_cdf: jnp.ndarray,  # (Wl, S)
+    tau_trace: jnp.ndarray,  # (Wl, T)
+    use_trace: jnp.ndarray,  # (Wl,)
+    step: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-worker heterogeneous tau draw (shard_map body; (Wl,) int32).
+
+    CDF workers invert their own row at ``u[w]``; trace workers replay
+    ``tau_trace[w, step mod T]``.  With identical CDF rows this bit-matches
+    :func:`sample_taus` on the same uniforms (same searchsorted, vmapped).
+    """
+    t_cdf = jax.vmap(jnp.searchsorted)(tau_cdf, u).astype(jnp.int32)
+    T = tau_trace.shape[1]
+    t_trace = jax.lax.dynamic_index_in_dim(
+        tau_trace, jnp.mod(step, T), axis=1, keepdims=False
+    ).astype(jnp.int32)
+    return jnp.where(use_trace > 0, t_trace, t_cdf)
+
+
+def record_worker_taus(hist: jnp.ndarray, taus: jnp.ndarray) -> jnp.ndarray:
+    """Scatter-add each local worker's tau into its own histogram row."""
+    Wl, bins = hist.shape
+    idx = jnp.clip(taus, 0, bins - 1)
+    return hist.at[jnp.arange(Wl), idx].add(1)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +300,42 @@ def host_refresh(
     opts into the swap for experiments that want the sampler to track the
     fit anyway.
     """
+    assert mts.estimator is not None, "host_refresh needs a MindTheStep with an estimator"
+    counts = np.asarray(jax.device_get(adapt.hist))
+    new_cdf = adapt.tau_cdf
+    if refresh_cdf:
+        # fit() is a pure read (idempotent): build the sampler swap before
+        # refresh() applies the once-per-boundary forgetting.  observe first
+        # so the swap sees this boundary's histogram.
+        mts.estimator.observe_counts(counts)
+        counts = None  # consumed
+        model = mts.estimator.fit(family)
+        new_cdf = staleness_cdf(model.pmf_table(adapt.tau_cdf.shape[0] - 1))
+    table = _refit_alpha_table(
+        counts, mts, strategy=strategy, family=family, K=K,
+        normalize=normalize, logger=logger, n_bins=adapt.alpha_table.shape[0],
+    )
+    return AdaptState(
+        alpha_table=table,
+        tau_cdf=new_cdf,
+        hist=jnp.zeros_like(adapt.hist),
+    )
+
+
+def _refit_alpha_table(
+    counts: np.ndarray | None,
+    mts: Any,
+    *,
+    strategy: str,
+    family: str,
+    K: float | None,
+    normalize: bool,
+    logger: Any,
+    n_bins: int,
+) -> jnp.ndarray:
+    """Shared refresh-boundary core: observe drained ``counts`` (unless the
+    caller already fed them), refit/rebuild the schedule, return the new f32
+    table truncated to ``n_bins``."""
     from repro.core.step_size import STRATEGIES
 
     assert mts.estimator is not None, "host_refresh needs a MindTheStep with an estimator"
@@ -190,15 +346,8 @@ def host_refresh(
     assert family in ("poisson", "cmp", "geometric", "uniform"), f"unknown family {family!r}"
     if K is None:
         K = mts.alpha_c
-
-    counts = np.asarray(jax.device_get(adapt.hist))
-    mts.estimator.observe_counts(counts)
-    new_cdf = adapt.tau_cdf
-    if refresh_cdf:
-        # fit() is a pure read (idempotent): build the sampler swap before
-        # refresh() applies the once-per-boundary forgetting.
-        model = mts.estimator.fit(family)
-        new_cdf = staleness_cdf(model.pmf_table(adapt.tau_cdf.shape[0] - 1))
+    if counts is not None:
+        mts.estimator.observe_counts(counts)
     try:
         mts.refresh(strategy, family=family, K=K, normalize=normalize)
     except ValueError as e:
@@ -213,15 +362,65 @@ def host_refresh(
                 f"host_refresh: kept previous schedule "
                 f"(n_seen={mts.estimator.n_seen}): {e}"
             )
-
     table = np.asarray(mts.schedule.table, np.float64)
-    T = adapt.alpha_table.shape[0]
-    assert len(table) >= T, (
-        f"refreshed schedule support {len(table) - 1} < adapt tau_max {T - 1}; "
+    assert len(table) >= n_bins, (
+        f"refreshed schedule support {len(table) - 1} < adapt tau_max {n_bins - 1}; "
         "construct the estimator with tau_max >= adapt.tau_max"
     )
-    return AdaptState(
-        alpha_table=jnp.asarray(table[:T], jnp.float32),
-        tau_cdf=new_cdf,
+    return jnp.asarray(table[:n_bins], jnp.float32)
+
+
+def merge_worker_hist(adapt: WorkerAdaptState, mesh=None, axis_name: str = "workers"):
+    """Global staleness histogram: psum-merge the per-worker rows.
+
+    With a ``workers`` mesh this runs as a tiny compiled collective — each
+    shard sums its local (W_local, bins) block, then one ``lax.psum`` merges
+    across shards and leaves the (bins,) result replicated (what the
+    ``host_refresh`` boundary pulls).  Without a mesh it is a plain sum.
+    """
+    if mesh is None or "workers" not in getattr(mesh, "axis_names", ()):
+        return jnp.sum(adapt.hist, axis=0)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.ctx import shard_map_compat
+
+    merged = shard_map_compat(
+        lambda h: jax.lax.psum(jnp.sum(h, axis=0), axis_name),
+        mesh=mesh,
+        in_specs=P(axis_name, None),
+        out_specs=P(None),
+    )(adapt.hist)
+    return merged
+
+
+def worker_host_refresh(
+    adapt: WorkerAdaptState,
+    mts: Any,
+    *,
+    mesh=None,
+    strategy: str = "poisson_momentum",
+    family: str = "poisson",
+    K: float | None = None,
+    normalize: bool = True,
+    logger: Any = print,
+) -> WorkerAdaptState:
+    """Refresh boundary of the sharded engine.
+
+    psum-merges the per-worker histograms into the global staleness histogram,
+    drains it into the estimator, refits the policy table, and returns a
+    same-shape :class:`WorkerAdaptState`.  The per-worker samplers (CDF rows,
+    traces) model the ENVIRONMENT and stay fixed, mirroring
+    :func:`host_refresh`'s fixed-sampler default.
+    """
+    counts = np.asarray(jax.device_get(merge_worker_hist(adapt, mesh)))
+    table = _refit_alpha_table(
+        counts, mts, strategy=strategy, family=family, K=K,
+        normalize=normalize, logger=logger, n_bins=adapt.alpha_table.shape[0],
+    )
+    return WorkerAdaptState(
+        alpha_table=table,
+        tau_cdf=adapt.tau_cdf,
+        tau_trace=adapt.tau_trace,
+        use_trace=adapt.use_trace,
         hist=jnp.zeros_like(adapt.hist),
     )

@@ -28,16 +28,33 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.async_engine.delayed import DelayedGradients, delayed_combine, init_delayed
+from repro.async_engine.delayed import (
+    DelayedGradients,
+    WorkerRing,
+    delayed_combine,
+    init_delayed,
+    init_worker_ring,
+    worker_ring_combine,
+)
 from repro.models import model as M
 from repro.optim.base import Optimizer
-from repro.training.adapt import AdaptState, alpha_lookup, record_taus, sample_taus
+from repro.training.adapt import (
+    AdaptState,
+    WorkerAdaptState,
+    alpha_lookup,
+    record_taus,
+    record_worker_taus,
+    sample_taus,
+    sample_worker_taus,
+)
 
 __all__ = [
     "TrainState",
     "init_train_state",
+    "init_sharded_async_state",
     "make_train_step",
     "make_async_train_step",
+    "make_sharded_async_train_step",
     "make_serve_step",
 ]
 
@@ -170,6 +187,148 @@ def make_async_train_step(
             "tau_mean": jnp.mean(taus.astype(jnp.float32)),
             "alpha_mean": jnp.mean(alpha),
             "live_frac": jnp.mean(live),
+            **metrics,
+        }
+
+    return train_step
+
+
+def init_sharded_async_state(
+    key: jax.Array,
+    cfg,
+    opt: Optimizer,
+    *,
+    ring: int,
+    adapt: WorkerAdaptState,
+    params: Any | None = None,
+    mesh=None,
+) -> TrainState:
+    """TrainState for the sharded engine: per-worker rings + WorkerAdaptState.
+
+    The worker count is taken from ``adapt``; ring leaves are (W, K, ...).
+    Pass ``mesh`` (with a ``workers`` axis) to place every worker-axis leaf
+    with :func:`repro.sharding.specs.worker_shardings` up front — otherwise
+    the first compiled step pays a one-time reshard.
+    """
+    state = init_train_state(key, cfg, opt, async_ring=0, adapt=adapt, params=params)
+    wring = init_worker_ring(state.params, ring, adapt.num_workers)
+    if mesh is not None and "workers" in getattr(mesh, "axis_names", ()):
+        from repro.sharding.specs import worker_shardings
+
+        wring = dataclasses.replace(
+            wring, ring=jax.device_put(wring.ring, worker_shardings(wring.ring, mesh))
+        )
+        placed = {
+            f: jax.device_put(v, worker_shardings(v, mesh))
+            for f, v in (
+                ("tau_cdf", adapt.tau_cdf), ("tau_trace", adapt.tau_trace),
+                ("use_trace", adapt.use_trace), ("hist", adapt.hist),
+            )
+        }
+        state = dataclasses.replace(state, adapt=dataclasses.replace(adapt, **placed))
+    return dataclasses.replace(state, delayed=wring)
+
+
+def make_sharded_async_train_step(
+    cfg,
+    opt: Optimizer,
+    *,
+    alpha_c: float,
+    mesh,
+    axis_name: str = "workers",
+) -> Callable:
+    """MindTheStep-AsyncPSGD sharded over a ``workers`` mesh axis.
+
+    The scalar-engine semantics of :func:`make_async_train_step`, with the
+    W-worker simulation executed under ``shard_map``: every device owns
+    ``W / |workers|`` worker rings, heterogeneous tau samplers (per-worker
+    CDF rows or trace replay — see :class:`WorkerAdaptState`), and histogram
+    rows.  Per tick each shard pushes the fresh gradient into its local rings,
+    samples its workers' taus, pops + alpha-weights its delayed gradients, and
+    a single ``lax.psum`` merges the partial sums into the global
+
+        g_eff = (1/W) sum_w alpha(tau_w)/alpha_c * live_w * g_{t - tau_w}
+
+    Histograms stay per-worker on-shard; they are psum-merged only at
+    ``worker_host_refresh`` boundaries.  On a 1-device mesh with homogeneous
+    CDF samplers this reproduces the single-shard trajectory bit-exactly
+    (regression-tested), because the gathers, weights, and the tensordot
+    contraction are the same ops on the same values.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.ctx import shard_map_compat
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        adapt = state.adapt
+        ring = state.delayed
+        assert isinstance(adapt, WorkerAdaptState), (
+            "sharded async step needs a WorkerAdaptState (see make_worker_adapt)"
+        )
+        assert isinstance(ring, WorkerRing), (
+            "sharded async step needs per-worker rings (see init_sharded_async_state)"
+        )
+        W = adapt.num_workers
+
+        def lf(p):
+            return M.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        grads = _constrain_grads(grads, cfg)
+        rng, sub = jax.random.split(state.rng)
+        u = jax.random.uniform(sub, (W,))
+
+        ring_specs = jax.tree.map(lambda _: P(axis_name), ring.ring)
+        grad_specs = jax.tree.map(lambda _: P(), grads)
+
+        def tick(ring_leaves, step, grads, u, cdf, trace, flags, hist, alpha_table):
+            taus = sample_worker_taus(u, cdf, trace, flags, step)
+            alpha = alpha_table[jnp.clip(taus, 0, alpha_table.shape[0] - 1)]
+            weights = alpha / jnp.float32(alpha_c * W)
+            g_eff, live, new_ring = worker_ring_combine(
+                ring_leaves, step, grads, taus, weights, axis_name=axis_name
+            )
+            new_hist = record_worker_taus(hist, taus)
+            stats = jax.lax.psum(
+                jnp.stack(
+                    [jnp.sum(taus.astype(jnp.float32)), jnp.sum(alpha), jnp.sum(live)]
+                ),
+                axis_name,
+            )
+            return g_eff, new_ring, new_hist, stats
+
+        g_eff, new_ring, new_hist, stats = shard_map_compat(
+            tick,
+            mesh=mesh,
+            in_specs=(
+                ring_specs, P(), grad_specs, P(axis_name),
+                P(axis_name, None), P(axis_name, None), P(axis_name),
+                P(axis_name, None), P(),
+            ),
+            out_specs=(grad_specs, ring_specs, P(axis_name, None), P()),
+        )(
+            ring.ring, ring.step, grads, u, adapt.tau_cdf,
+            adapt.tau_trace, adapt.use_trace, adapt.hist, adapt.alpha_table,
+        )
+
+        new_adapt = WorkerAdaptState(
+            alpha_table=adapt.alpha_table,
+            tau_cdf=adapt.tau_cdf,
+            tau_trace=adapt.tau_trace,
+            use_trace=adapt.use_trace,
+            hist=new_hist,
+        )
+        new_params, new_opt = opt.update(g_eff, state.opt_state, state.params)
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt, step=state.step + 1,
+            rng=rng, delayed=WorkerRing(ring=new_ring, step=ring.step + 1),
+            adapt=new_adapt,
+        )
+        return new_state, {
+            "loss": loss,
+            "tau_mean": stats[0] / W,
+            "alpha_mean": stats[1] / W,
+            "live_frac": stats[2] / W,
             **metrics,
         }
 

@@ -24,6 +24,7 @@ from repro.core import step_size as SS
 class TestEventSim:
     """The paper's tau = tau_C + tau_S regimes (Fig 2 narrative)."""
 
+    @pytest.mark.staleness_trace
     def test_dl_regime_poisson_beats_geometric(self):
         cfg = EventSimConfig(m=8, compute_mean=1.0, apply_mean=0.02)
         taus = simulate_staleness_trace(cfg, 20000, seed=1)
@@ -37,12 +38,14 @@ class TestEventSim:
         mode = int(np.bincount(taus).argmax())
         assert abs(mode - 11) <= 1
 
+    @pytest.mark.staleness_geometric
     def test_ps_regime_geometric_wins(self):
         cfg = EventSimConfig(m=8, compute_mean=0.01, apply_mean=1.0)
         taus = simulate_staleness_trace(cfg, 20000, seed=1)
         fits = S.fit_all_models(taus, m=8)
         assert fits["Geometric"][1] < fits["Poisson"][1]
 
+    @pytest.mark.staleness_trace
     def test_deterministic_given_seed(self):
         cfg = EventSimConfig(m=4)
         a = simulate_staleness_trace(cfg, 500, seed=7)

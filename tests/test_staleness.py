@@ -21,6 +21,7 @@ class TestPMFs:
         assert tab.sum() == pytest.approx(1.0, abs=1e-6)
         assert (tab >= 0).all()
 
+    @pytest.mark.staleness_cmp
     def test_cmp_nu1_equals_poisson(self):
         lam = 6.5
         ks = np.arange(64)
@@ -28,6 +29,7 @@ class TestPMFs:
             S.CMP(lam, 1.0).pmf(ks), S.Poisson(lam).pmf(ks), rtol=1e-8
         )
 
+    @pytest.mark.staleness_cmp
     @given(m=st.integers(2, 40), nu=st.floats(0.3, 4.0))
     @settings(max_examples=30, deadline=None)
     def test_cmp_mode_relation(self, m, nu):
@@ -37,6 +39,7 @@ class TestPMFs:
         empirical_mode = int(np.argmax(tab))
         assert abs(empirical_mode - m) <= 1  # floor() boundary tolerance
 
+    @pytest.mark.staleness_geometric
     def test_geometric_support_starts_at_zero(self):
         g = S.Geometric(0.25)
         assert g.pmf(0) == pytest.approx(0.25)
@@ -82,6 +85,7 @@ class TestFitting:
         d_geom = fits["Geometric"][1]
         assert d_pois < d_geom
 
+    @pytest.mark.staleness_cmp
     def test_cmp_mode_relation_fit_1d(self, rng):
         true = S.CMP.from_mode(8, 1.7)
         taus = true.sample(rng, (50000,))
