@@ -2,9 +2,11 @@
 
 1. Fit a staleness model to a simulated async execution (paper §IV).
 2. Build the staleness-adaptive step-size schedule (eq. 17 protocol).
-3. Train a small LM with the async MindTheStep step on CPU, with the
-   alpha table / tau CDF / staleness histogram jit-resident in
-   ``TrainState.adapt`` and refreshed online every 20 steps.
+3. Train a small LM with the async MindTheStep step on CPU — the update is
+   one composable pipeline (``chain(scale_by_staleness(...), scale(-lr))``)
+   compiled by ``make_step(..., mode="async")``, with the alpha table /
+   tau CDF / staleness histogram jit-resident in ``TrainState.adapt`` and
+   refreshed online every 20 steps.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,8 +19,8 @@ from repro.configs import get_config, reduced
 from repro.core import staleness as S
 from repro.core import step_size as SS
 from repro.data import lm_batches
-from repro.optim import mindthestep, sgd
-from repro.training import init_train_state, make_adapt, make_async_train_step, train_loop
+from repro.optim import transform as T
+from repro.training import init_train_state, make_adapt, make_step, train_loop
 
 M_WORKERS = 8
 ALPHA_C = 0.05
@@ -42,19 +44,24 @@ print(f"\nalpha(tau) table head: {np.round(sched.table[:6], 4)}")
 print(f"E_tau[alpha(tau)] = {sched.expectation(pmf):.4f} (alpha_c = {ALPHA_C})")
 
 # -- 3. async training with delayed gradients + adaptive steps ---------------
-# The tables live in TrainState.adapt (step INPUTS, not closure constants):
-# every 20 steps the host drains the in-jit tau histogram, refits, and swaps
-# fresh tables into the already-compiled step — no retrace, no per-step sync.
+# The whole update is ONE composable pipeline: the staleness link (with the
+# online estimator attached via m=), then the base SGD step.  The tables live
+# in TrainState.adapt (step INPUTS, not closure constants): every 20 steps the
+# host drains the in-jit tau histogram, refits, and swaps fresh tables into
+# the already-compiled step — no retrace, no per-step sync.
 cfg = reduced(get_config("stablelm-1.6b"), d_model=128)
-opt = sgd(ALPHA_C)
-mts = mindthestep(opt, sched, ALPHA_C, m=M_WORKERS, tau_max=63)
+pipeline = T.chain(
+    T.scale_by_staleness(sched, ALPHA_C, m=M_WORKERS, tau_max=63),
+    T.scale(-ALPHA_C),
+)
 adapt = make_adapt(sched, poisson, cdf_support=32, tau_max=63)
-state = init_train_state(jax.random.PRNGKey(0), cfg, opt, async_ring=32, adapt=adapt)
-step = make_async_train_step(cfg, opt, alpha_c=ALPHA_C, num_workers=M_WORKERS)
+state = init_train_state(jax.random.PRNGKey(0), cfg, pipeline, async_ring=32, adapt=adapt)
+step = make_step(cfg, pipeline, mode="async", num_workers=M_WORKERS)
 state, history = train_loop(
     step, state, lm_batches(cfg.vocab_size, 8, 64, seed=0),
-    num_steps=60, log_every=20, mts=mts, refresh_every=20,
+    num_steps=60, log_every=20, pipeline=pipeline, refresh_every=20,
 )
+est = T.staleness_link(pipeline).estimator
 print(f"\ndone — final loss {history[-1]['loss']:.3f} "
       f"(started {history[0]['loss']:.3f}); "
-      f"online lam estimate {mts.estimator.fit('poisson').lam:.2f}")
+      f"online lam estimate {est.fit('poisson').lam:.2f}")

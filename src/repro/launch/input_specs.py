@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.models import model as M
-from repro.optim import sgd
+from repro.optim import transform as T
 from repro.sharding.specs import batch_shape_structs
 from repro.training.steps import init_train_state
 
@@ -75,12 +75,18 @@ def _default_adapt(cfg, *, alpha_c: float = 0.01):
     return adapt
 
 
+def _train_pipeline(alpha_c: float = 0.01) -> T.Chain:
+    """The dry-run training pipeline — shared by the specs builder and the
+    step builder so the abstract opt_state always matches the lowered step."""
+    return T.chain(T.scale(-alpha_c))
+
+
 def _train_specs(cfg, *, batch: int, seq: int):
-    opt = sgd(0.01)
     K = ring_size_for(cfg)
     state = jax.eval_shape(
         lambda: init_train_state(
-            jax.random.PRNGKey(0), cfg, opt, async_ring=K, adapt=_default_adapt(cfg)
+            jax.random.PRNGKey(0), cfg, _train_pipeline(), async_ring=K,
+            adapt=_default_adapt(cfg),
         )
     )
     batch_sds = batch_shape_structs(cfg, batch=batch, seq=seq)
@@ -120,7 +126,7 @@ def input_specs(arch: str, shape_name: str, *, unroll: bool = False) -> tuple:
 
 def step_for_cfg(cfg, shape_name: str, *, alpha_c: float = 0.01):
     """The concrete step function the dry-run lowers for this combination."""
-    from repro.training.steps import make_async_train_step, make_serve_step
+    from repro.training.steps import make_serve_step, make_step
 
     seq, batch, kind = INPUT_SHAPES[shape_name]
 
@@ -128,9 +134,9 @@ def step_for_cfg(cfg, shape_name: str, *, alpha_c: float = 0.01):
         # The paper's production configuration: Poisson(m) staleness model,
         # eq. (17) step size with K=1, ring of delayed gradients.  The alpha
         # table / tau CDF ride in TrainState.adapt (see _default_adapt).
-        opt = sgd(alpha_c)
-        return make_async_train_step(
-            cfg, opt, alpha_c=alpha_c, num_workers=workers_for(cfg)
+        return make_step(
+            cfg, _train_pipeline(alpha_c), mode="async",
+            alpha_c=alpha_c, num_workers=workers_for(cfg),
         )
     if kind == "prefill":
         # vlm: the vision prefix occupies cache slots ahead of the tokens

@@ -1,9 +1,10 @@
-"""Scenario-matrix runner: {arch} x {staleness model} x {adaptive strategy}.
+"""Scenario-matrix runner: {arch} x {staleness model} x {strategy} x {optimizer}.
 
     PYTHONPATH=src python -m repro.launch.scenarios --smoke
     PYTHONPATH=src python -m repro.launch.scenarios \
         --archs stablelm-1.6b,qwen2-moe-a2.7b --staleness geometric,cmp,trace \
-        --strategies fixed,eq17,eq26 --steps 20 --out BENCH_scenarios.json
+        --strategies fixed,eq17,eq26 --optims sgd,adam --steps 20 \
+        --out BENCH_scenarios.json
 
 Each cell trains a reduced config for a few steps through the SHARDED async
 engine (per-worker rings + heterogeneous tau samplers under ``shard_map``
@@ -16,6 +17,12 @@ Staleness models are heterogeneous ACROSS workers within each family —
 per-worker geometric p / Poisson lambda / CMP nu spreads, and per-worker
 event-simulator traces for ``trace`` — exercising exactly the model- and
 scale-dependence the single-sampler harness could not.
+
+The optimizer axis exists because the update is a composable pipeline
+(:mod:`repro.optim.transform`): a cell's optimizer is just its base links —
+``chain(scale(-lr))`` for ``sgd``, ``chain(scale_by_adam(), scale(-lr))`` for
+``adam`` — handed to the one :func:`~repro.training.steps.make_step` builder;
+adding an optimizer never touches the engine.
 """
 
 from __future__ import annotations
@@ -34,19 +41,21 @@ from repro.core.staleness import CMP, Geometric, Poisson
 from repro.core.step_size import make_schedule
 from repro.data import make_batch_for
 from repro.launch.mesh import make_workers_mesh
-from repro.optim import sgd
+from repro.optim import transform as T
 from repro.training import (
     init_sharded_async_state,
-    make_sharded_async_train_step,
+    make_step,
     make_worker_adapt,
 )
 
 STALENESS_FAMILIES = ("geometric", "poisson", "cmp", "trace")
 STRATEGY_CHOICES = ("fixed", "eq17", "eq26")
+OPTIM_CHOICES = ("sgd", "adam")
 
 SMOKE_ARCHS = ("stablelm-1.6b", "recurrentgemma-9b")
 SMOKE_STALENESS = ("geometric", "trace")
 SMOKE_STRATEGIES = ("eq26",)
+SMOKE_OPTIMS = ("sgd", "adam")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +63,7 @@ class ScenarioCell:
     arch: str
     staleness: str
     strategy: str
+    optim: str = "sgd"
     workers: int = 4
     ring: int = 8
     steps: int = 6
@@ -65,7 +75,7 @@ class ScenarioCell:
 
     @property
     def name(self) -> str:
-        return f"scenarios/{self.arch}/{self.staleness}/{self.strategy}"
+        return f"scenarios/{self.arch}/{self.staleness}/{self.strategy}/{self.optim}"
 
     def config(self) -> dict:
         return dataclasses.asdict(self)
@@ -113,21 +123,32 @@ def cell_schedule(cell: ScenarioCell):
     raise ValueError(f"unknown strategy {cell.strategy!r}")
 
 
+def cell_pipeline(cell: ScenarioCell, sched) -> T.Chain:
+    """The cell's full update pipeline: staleness link + optimizer links."""
+    staleness = T.scale_by_staleness(sched, cell.lr)
+    if cell.optim == "sgd":
+        return T.chain(staleness, T.scale(-cell.lr))
+    if cell.optim == "adam":
+        return T.chain(staleness, T.scale_by_adam(), T.scale(-cell.lr))
+    raise ValueError(f"unknown optimizer {cell.optim!r}")
+
+
 def run_cell(cell: ScenarioCell, mesh=None) -> list[dict]:
     """Train one matrix cell; returns its BENCH rows."""
     mesh = make_workers_mesh() if mesh is None else mesh
     cfg = reduced(get_config(cell.arch), d_model=cell.d_model)
-    opt = sgd(cell.lr)
     sched = cell_schedule(cell)
+    pipeline = cell_pipeline(cell, sched)
     adapt = make_worker_adapt(
         sched.table, worker_models(cell), cdf_support=cell.ring
     )
     state = init_sharded_async_state(
-        jax.random.PRNGKey(cell.seed), cfg, opt, ring=cell.ring, adapt=adapt, mesh=mesh
+        jax.random.PRNGKey(cell.seed), cfg, pipeline, ring=cell.ring, adapt=adapt,
+        mesh=mesh,
     )
 
     retraces = []
-    base = make_sharded_async_train_step(cfg, opt, alpha_c=cell.lr, mesh=mesh)
+    base = make_step(cfg, pipeline, mode="sharded_async", mesh=mesh)
 
     def counting(s, b):
         retraces.append(1)  # runs only when jax (re)traces
@@ -185,13 +206,14 @@ def run_matrix(cells: list[ScenarioCell], out: str, logger=print) -> list[dict]:
 def build_cells(args) -> list[ScenarioCell]:
     return [
         ScenarioCell(
-            arch=a, staleness=s, strategy=st,
+            arch=a, staleness=s, strategy=st, optim=o,
             workers=args.workers, ring=args.ring, steps=args.steps,
             batch=args.batch, seq=args.seq, lr=args.lr, seed=args.seed,
         )
         for a in args.archs
         for s in args.staleness
         for st in args.strategies
+        for o in args.optims
     ]
 
 
@@ -200,6 +222,7 @@ def main(argv=None) -> None:
     ap.add_argument("--archs", default=",".join(SMOKE_ARCHS))
     ap.add_argument("--staleness", default=",".join(SMOKE_STALENESS))
     ap.add_argument("--strategies", default=",".join(SMOKE_STRATEGIES))
+    ap.add_argument("--optims", default="sgd")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--ring", type=int, default=8)
     ap.add_argument("--steps", type=int, default=6)
@@ -207,22 +230,27 @@ def main(argv=None) -> None:
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--smoke", action="store_true", help="CI cell set (2 archs x 2 models)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cell set (2 archs x 2 models x 2 optims)")
     ap.add_argument("--out", default="BENCH_scenarios.json")
     args = ap.parse_args(argv)
     if args.smoke:
         args.archs = ",".join(SMOKE_ARCHS)
         args.staleness = ",".join(SMOKE_STALENESS)
         args.strategies = ",".join(SMOKE_STRATEGIES)
+        args.optims = ",".join(SMOKE_OPTIMS)
     args.archs = [a for a in args.archs.split(",") if a]
     args.staleness = [s for s in args.staleness.split(",") if s]
     args.strategies = [s for s in args.strategies.split(",") if s]
+    args.optims = [o for o in args.optims.split(",") if o]
     for a in args.archs:
         assert a in ASSIGNED_ARCHS, f"unknown arch {a!r}"
     for s in args.staleness:
         assert s in STALENESS_FAMILIES, f"unknown staleness family {s!r}"
     for s in args.strategies:
         assert s in STRATEGY_CHOICES, f"unknown strategy {s!r}"
+    for o in args.optims:
+        assert o in OPTIM_CHOICES, f"unknown optimizer {o!r}"
     run_matrix(build_cells(args), args.out)
 
 

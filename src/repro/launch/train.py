@@ -11,11 +11,20 @@ staleness model with lambda = m, eq. (17) step size with K = alpha_c (the
 implicit-momentum magnitude, in step-size units), normalization (eq. 26)
 against the observed tau histogram, clip at 5 alpha_c, drop tau>150.
 
+The update is assembled as ONE gradient-transform pipeline
+(:mod:`repro.optim.transform`) and compiled through the unified
+:func:`~repro.training.steps.make_step` builder:
+
+    chain(scale_by_staleness(schedule, alpha_c, m=W),   # when --async_psgd
+          scale(-lr) [, trace(mu)] | fused_apply(lr, mu))
+
 With ``--refresh_every N`` the adaptation runs online: the compiled step
 samples W worker taus per tick and histograms them in-jit; every N steps the
 host drains the histogram, refits, and swaps fresh tables into the
-jit-resident :class:`AdaptState` (no retrace).  ``--fused`` applies updates
-through the fused flat-buffer path (Pallas ``adaptive_update`` on TPU).
+jit-resident :class:`AdaptState` (no retrace) — the refresh boundary is
+driven by the pipeline's own staleness link (``train_loop(pipeline=...)``).
+``--fused`` applies updates through the fused flat-buffer path (Pallas
+``adaptive_update`` on TPU).
 """
 
 from __future__ import annotations
@@ -27,12 +36,11 @@ import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.data import lm_batches
-from repro.optim import mindthestep, momentum, sgd
+from repro.optim import transform as T
 from repro.training import (
     default_adapt_setup,
     init_train_state,
-    make_async_train_step,
-    make_train_step,
+    make_step,
     train_loop,
 )
 
@@ -52,32 +60,39 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="fused flat-buffer momentum apply (Pallas on TPU)")
     ap.add_argument("--momentum", type=float, default=None,
-                    help="heavy-ball mu (selects the momentum optimizer; "
-                         "defaults to 0.9 when --fused is set; 0.0 is honored)")
+                    help="heavy-ball mu (adds the trace link; defaults to 0.9 "
+                         "when --fused is set; 0.0 is honored)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.fused or args.momentum is not None:
-        mu = 0.9 if args.momentum is None else args.momentum
-        opt = momentum(args.lr, mu, fused=args.fused)
-    else:
-        opt = sgd(args.lr)
 
-    mts = adapt = None
+    # -- base-update links (the optimizer) -----------------------------------
+    if args.fused:
+        mu = 0.9 if args.momentum is None else args.momentum
+        base_links = (T.fused_apply(args.lr, mu),)
+    elif args.momentum is not None:
+        base_links = (T.scale(-args.lr), T.trace(args.momentum))
+    else:
+        base_links = (T.scale(-args.lr),)
+
+    # -- staleness link + step builder ----------------------------------------
+    adapt = None
     if args.async_psgd:
         sched, model, adapt = default_adapt_setup(args.lr, args.workers, args.ring)
         # m enables the online estimator; its tau_max must cover adapt's so a
         # refreshed table always fills the jit-resident one.
-        mts = mindthestep(opt, sched, args.lr, m=args.workers, tau_max=adapt.tau_max)
-        step = make_async_train_step(cfg, opt, alpha_c=args.lr, num_workers=args.workers)
+        link = T.scale_by_staleness(sched, args.lr, m=args.workers, tau_max=adapt.tau_max)
+        pipeline = T.chain(link, *base_links)
+        step = make_step(cfg, pipeline, mode="async", num_workers=args.workers)
     else:
-        step = make_train_step(cfg, opt)
+        pipeline = T.chain(*base_links)
+        step = make_step(cfg, pipeline, mode="sync")
 
     state = init_train_state(
-        jax.random.PRNGKey(args.seed), cfg, opt,
+        jax.random.PRNGKey(args.seed), cfg, pipeline,
         async_ring=args.ring if args.async_psgd else 0, adapt=adapt,
     )
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
@@ -87,13 +102,14 @@ def main():
     batches = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
     state, history = train_loop(
         step, state, batches, num_steps=args.steps,
-        mts=mts, refresh_every=args.refresh_every,
+        pipeline=pipeline, refresh_every=args.refresh_every,
         log_every=max(args.steps // 10, 1),
     )
     if args.async_psgd and args.refresh_every:
-        lam = mts.estimator.fit("poisson").lam
+        est = T.staleness_link(pipeline).estimator
+        lam = est.fit("poisson").lam
         print(f"online estimator: lam={lam:.2f} (m={args.workers}), "
-              f"n_seen={mts.estimator.n_seen}")
+              f"n_seen={est.n_seen}")
     print(f"final loss: {history[-1]['loss']:.4f}")
 
 

@@ -1,3 +1,4 @@
+from repro.optim import transform
 from repro.optim.base import (
     Optimizer,
     adam,
@@ -10,8 +11,39 @@ from repro.optim.base import (
     unpack_flat,
 )
 from repro.optim.mindthestep import MindTheStep, mindthestep
+from repro.optim.transform import (
+    Chain,
+    GradientTransform,
+    StepContext,
+    chain,
+    drop_stale,
+    fused_apply,
+    run_pipeline,
+    scale,
+    scale_by_adam,
+    scale_by_staleness,
+    staleness_link,
+    trace,
+)
 
 __all__ = [
+    # transform pipeline (the composable API; clip_by_global_norm's chainable
+    # form lives at transform.clip_by_global_norm — the top-level name keeps
+    # the legacy eager function)
+    "transform",
+    "Chain",
+    "GradientTransform",
+    "StepContext",
+    "chain",
+    "drop_stale",
+    "fused_apply",
+    "run_pipeline",
+    "scale",
+    "scale_by_adam",
+    "scale_by_staleness",
+    "staleness_link",
+    "trace",
+    # legacy shims
     "Optimizer",
     "sgd",
     "momentum",

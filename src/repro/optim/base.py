@@ -1,9 +1,28 @@
-"""Optimizer substrate: pure pytree transforms, no external deps.
+"""Optimizer substrate: thin shims over the composable transform pipeline.
 
 An :class:`Optimizer` is an (init, update) pair over parameter pytrees:
 
     state = opt.init(params)
     new_params, new_state = opt.update(grads, state, params, scale=s)
+
+Since the ``chain()`` redesign, every optimizer here is a DEPRECATED shim over
+a :mod:`repro.optim.transform` pipeline (exposed as ``opt.pipeline``): the
+shim keeps the legacy state layout (e.g. ``momentum``'s velocity pytree) and
+``scale=`` kwarg, but the arithmetic is the chain's — trajectories are
+bit-identical to running the pipeline directly (regression-tested in
+tests/test_optim.py).  One deliberate numerics change vs the pre-chain
+``sgd``: the canonical apply (:func:`repro.optim.transform.apply_updates`)
+accumulates in f32 before casting back, so under low-precision parameter
+storage (``cfg.param_dtype="bfloat16"``) sgd now rounds once at the end like
+momentum/adam always did, instead of subtracting in bf16 — f32-param
+trajectories (the tier-1 surface) are unchanged bit-for-bit.  New code
+should build pipelines:
+
+    from repro.optim import transform as T
+    pipe = T.chain(T.scale(-lr))                      # == sgd(lr)
+    pipe = T.chain(T.scale(-lr), T.trace(mu))         # == momentum(lr, mu)
+    pipe = T.chain(T.fused_apply(lr, mu))             # == momentum(fused=True)
+    pipe = T.chain(T.scale_by_adam(b1, b2, eps), T.scale(-lr))  # == adam(...)
 
 ``scale`` is a (possibly traced) multiplier on the learning rate — this is the
 seam MindTheStep plugs into: the staleness-adaptive factor ``alpha(tau)/alpha``
@@ -21,7 +40,14 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.optim import transform as T
+from repro.optim.transform import (  # noqa: F401  (canonical home: transform.py)
+    apply_updates,
+    global_norm,
+    pack_flat,
+    unpack_flat,
+)
 
 Params = Any
 
@@ -40,52 +66,25 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """Legacy (init, update) interface; ``pipeline`` is the chain it shims.
+
+    ``update`` has signature ``(grads, state, params, scale=1.0)`` and applies
+    the update internally.  The unified step builder
+    (:func:`repro.training.steps.make_step`) accepts either an Optimizer or a
+    bare :class:`~repro.optim.transform.GradientTransform`.
+    """
+
     init: Callable[[Params], Any]
     update: Callable[..., tuple[Params, Any]]  # (grads, state, params, scale=1.0)
-
-
-def apply_updates(params: Params, updates: Params) -> Params:
-    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
-
-
-def global_norm(tree: Params) -> jnp.ndarray:
-    leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    pipeline: T.GradientTransform | None = None
 
 
 def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    """Eager clip over a pytree (legacy function form; the chainable link is
+    :func:`repro.optim.transform.clip_by_global_norm`)."""
     n = global_norm(tree)
     factor = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
     return jax.tree.map(lambda l: l * factor.astype(l.dtype), tree)
-
-
-# ---------------------------------------------------------------------------
-# Flat-param packing: the seam between pytree land and the fused server apply
-# ---------------------------------------------------------------------------
-
-def pack_flat(tree: Params, dtype=jnp.float32) -> jnp.ndarray:
-    """Pack every leaf of ``tree`` into one contiguous 1-D ``dtype`` buffer.
-
-    Thin wrapper over ``jax.flatten_util.ravel_pytree`` (leaf order is
-    ``jax.tree.leaves`` order).  The fused server apply (Pallas
-    ``adaptive_update``) runs over this single buffer in one HBM pass instead
-    of one dispatch per leaf.
-    """
-    from jax.flatten_util import ravel_pytree
-
-    if not jax.tree.leaves(tree):
-        return jnp.zeros((0,), dtype)
-    return ravel_pytree(tree)[0].astype(dtype)
-
-
-def unpack_flat(flat: jnp.ndarray, like: Params) -> Params:
-    """Split a packed buffer back into the shapes/dtypes of ``like``."""
-    from jax.flatten_util import ravel_pytree
-
-    canonical, unravel = ravel_pytree(like)
-    # unravel type-checks its input against the ravel dtype of `like` (e.g.
-    # bf16 params); the cast is the same per-leaf down-cast unravel applies.
-    return unravel(flat.astype(canonical.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -93,18 +92,22 @@ def unpack_flat(flat: jnp.ndarray, like: Params) -> Params:
 # ---------------------------------------------------------------------------
 
 def sgd(lr: float) -> Optimizer:
-    """Plain SGD — the paper's eq. (1)/(4) update: ``x <- x - alpha g``."""
+    """Plain SGD — the paper's eq. (1)/(4) update: ``x <- x - alpha g``.
+
+    Shim over ``chain(scale(-lr))``; legacy state is ``()``.
+    """
+    pipe = T.chain(T.scale(-lr))
 
     def init(params):
         return ()
 
     def update(grads, state, params, scale=1.0):
-        step = jnp.asarray(lr) * scale
-        new = jax.tree.map(lambda p, g: p - (step * g.astype(jnp.float32)).astype(p.dtype),
-                           params, grads)
-        return new, state
+        new_params, _ = T.run_pipeline(
+            pipe, grads, ((),), params, T.StepContext(scale=scale)
+        )
+        return new_params, state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, pipeline=pipe)
 
 
 # ---------------------------------------------------------------------------
@@ -115,27 +118,32 @@ def momentum(lr: float, mu: float = 0.9, *, fused: bool = False) -> Optimizer:
     """``v <- mu v - alpha g;  x <- x + v`` — the explicit-momentum baseline
     the paper's implicit asynchrony-induced momentum is compared against.
 
-    ``fused=True`` routes the apply through the fused
-    :mod:`repro.kernels.adaptive_update` path: the velocity lives as ONE flat
-    f32 buffer and the whole update is a single fused pass over it (Pallas
-    kernel on TPU, one fused XLA elementwise op elsewhere) instead of a
-    per-leaf ``tree.map`` dispatch — the paper's "the server apply must be
-    fast so tau_S stays small" requirement.  Numerics match the unfused path
-    to f32 rounding; only the opt-state layout differs (flat vs pytree).
+    Shim over ``chain(scale(-lr), trace(mu))`` — the scale-before-trace order
+    keeps the trace state in step-size units, i.e. it IS eq. 5's velocity, so
+    the legacy velocity-pytree state is exactly the trace link's state.
+
+    ``fused=True`` shims ``chain(fused_apply(lr, mu))`` instead: the velocity
+    lives as ONE flat f32 buffer and the whole update is a single fused pass
+    over it (Pallas kernel on TPU, one fused XLA elementwise op elsewhere) —
+    the paper's "the server apply must be fast so tau_S stays small"
+    requirement.  Numerics match the unfused path to f32 rounding; only the
+    opt-state layout differs (flat vs pytree).
     """
     if fused:
         return _momentum_fused(lr, mu)
+
+    pipe = T.chain(T.scale(-lr), T.trace(mu))
 
     def init(params):
         return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
 
     def update(grads, state, params, scale=1.0):
-        step = jnp.asarray(lr) * scale
-        v = jax.tree.map(lambda v, g: mu * v - step * g.astype(jnp.float32), state, grads)
-        new = jax.tree.map(lambda p, v: (p.astype(jnp.float32) + v).astype(p.dtype), params, v)
-        return new, v
+        new_params, (_, v) = T.run_pipeline(
+            pipe, grads, ((), state), params, T.StepContext(scale=scale)
+        )
+        return new_params, v
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, pipeline=pipe)
 
 
 def _momentum_fused(lr: float, mu: float) -> Optimizer:
@@ -149,23 +157,18 @@ def _momentum_fused(lr: float, mu: float) -> Optimizer:
     ``benchmarks/kernels_bench.py`` for both the isolated-apply and the
     full round-trip timings.
     """
-    from repro.kernels.adaptive_update.ops import adaptive_update_flat
+    pipe = T.chain(T.fused_apply(lr, mu))
 
     def init(params):
-        n = sum(int(np.prod(l.shape)) if l.shape else 1 for l in jax.tree.leaves(params))
-        return jnp.zeros((n,), jnp.float32)
+        return pipe.init(params)[0]
 
     def update(grads, state, params, scale=1.0):
-        if isinstance(grads, jax.Array) and grads.ndim == 1:
-            g_flat = grads.astype(jnp.float32)
-        else:
-            g_flat = pack_flat(grads)
-        p_flat = pack_flat(params)
-        alpha = jnp.asarray(lr, jnp.float32) * scale
-        p_new, v_new = adaptive_update_flat(p_flat, g_flat, state, alpha, jnp.float32(mu))
-        return unpack_flat(p_new, params), v_new
+        new_params, (v,) = T.run_pipeline(
+            pipe, grads, (state,), params, T.StepContext(scale=scale)
+        )
+        return new_params, v
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, pipeline=pipe)
 
 
 # ---------------------------------------------------------------------------
@@ -173,30 +176,17 @@ def _momentum_fused(lr: float, mu: float) -> Optimizer:
 # ---------------------------------------------------------------------------
 
 def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Shim over ``chain(scale_by_adam(b1, b2, eps), scale(-lr))``; legacy
+    state is the ``{"m", "v", "t"}`` dict (the preconditioner link's state)."""
+    pipe = T.chain(T.scale_by_adam(b1, b2, eps), T.scale(-lr))
+
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
-        return {
-            "m": jax.tree.map(zeros, params),
-            "v": jax.tree.map(zeros, params),
-            "t": jnp.zeros((), jnp.int32),
-        }
+        return pipe.init(params)[0]
 
     def update(grads, state, params, scale=1.0):
-        t = state["t"] + 1
-        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                         state["m"], grads)
-        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                         state["v"], grads)
-        tf = t.astype(jnp.float32)
-        mhat_c = 1.0 / (1.0 - b1**tf)
-        vhat_c = 1.0 / (1.0 - b2**tf)
-        step = jnp.asarray(lr) * scale
-        new = jax.tree.map(
-            lambda p, m, v: (
-                p.astype(jnp.float32) - step * (m * mhat_c) / (jnp.sqrt(v * vhat_c) + eps)
-            ).astype(p.dtype),
-            params, m, v,
+        new_params, (mvt, _) = T.run_pipeline(
+            pipe, grads, (state, ()), params, T.StepContext(scale=scale)
         )
-        return new, {"m": m, "v": v, "t": t}
+        return new_params, mvt
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, pipeline=pipe)

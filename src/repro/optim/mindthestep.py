@@ -1,5 +1,18 @@
 """MindTheStep: the paper's contribution as a first-class optimizer wrapper.
 
+DEPRECATED shim over the composable pipeline API
+(:mod:`repro.optim.transform`): the wrapper is now literally
+
+    chain(scale_by_staleness(schedule, alpha_c), *base_optimizer_links)
+
+and :class:`MindTheStep` keeps the legacy interface on top of that chain —
+trajectories are bit-identical to running the chain directly
+(regression-tested in tests/test_optim.py).  New code should build the chain:
+
+    from repro.optim import transform as T
+    pipe = T.chain(T.scale_by_staleness(schedule, alpha_c, m=m),
+                   T.scale(-lr), T.trace(mu))
+
 Algorithm 1 of the paper: the parameter server applies each incoming gradient
 with a *staleness-adaptive* step ``x <- x - alpha(tau) g``.  Here the server
 update point is the post-psum optimizer application, and the wrapper is
@@ -10,9 +23,9 @@ update point is the post-psum optimizer application, and the wrapper is
 ``schedule`` is a :class:`repro.core.step_size.StepSizeSchedule` table built
 from any of the paper's strategies (Thm 3/4/5, Cor 1/2) — the gather
 ``schedule(tau)`` happens inside jit, so ``tau`` may be a traced per-step
-staleness observation.  The base optimizer sees ``scale = alpha(tau)/alpha_c``
-and stays oblivious to asynchrony, exactly the framework's "modularized
-alpha" design (§IV.A).
+staleness observation.  The base optimizer sees the ``alpha(tau)/alpha_c``-
+scaled update and stays oblivious to asynchrony, exactly the framework's
+"modularized alpha" design (§IV.A).
 
 The wrapper also exposes the online-estimation hook: ``observe(tau)`` /
 ``observe_counts(hist)`` feed the host-side histogram and ``refresh()``
@@ -25,49 +38,74 @@ explicit refresh boundary), never on the ``fit()`` read path.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.estimator import OnlineStalenessEstimator
 from repro.core.step_size import StepSizeSchedule
+from repro.optim import transform as T
 from repro.optim.base import Optimizer
 
 __all__ = ["MindTheStep", "mindthestep"]
 
 
-@dataclasses.dataclass
 class MindTheStep:
-    """Staleness-adaptive wrapper around any base :class:`Optimizer`."""
+    """Staleness-adaptive wrapper around any base :class:`Optimizer`.
 
-    base: Optimizer
-    schedule: StepSizeSchedule
-    alpha_c: float
-    estimator: OnlineStalenessEstimator | None = None
+    Deprecated shim: ``self.link`` is the underlying
+    :class:`~repro.optim.transform.StalenessTransform` and ``self.pipeline``
+    the full chain (staleness link + base links); ``schedule`` / ``alpha_c`` /
+    ``estimator`` read through to the link so a ``refresh()`` through either
+    handle stays coherent.
+    """
+
+    def __init__(self, base: Optimizer, schedule: StepSizeSchedule, alpha_c: float,
+                 estimator: OnlineStalenessEstimator | None = None):
+        self.base = base
+        self.link = T.scale_by_staleness(schedule, alpha_c)
+        self.link.estimator = estimator
+        base_links = getattr(base.pipeline, "links", ())
+        self.pipeline = T.chain(self.link, *base_links) if base_links else None
+
+    # -- link read-through ---------------------------------------------------
+    @property
+    def schedule(self) -> StepSizeSchedule:
+        return self.link.schedule
+
+    @schedule.setter
+    def schedule(self, sched) -> None:
+        self.link.schedule = sched
+
+    @property
+    def alpha_c(self) -> float:
+        return self.link.alpha_c
+
+    @property
+    def estimator(self) -> OnlineStalenessEstimator | None:
+        return self.link.estimator
 
     # -- Optimizer interface -------------------------------------------------
     def init(self, params):
         return self.base.init(params)
 
     def update(self, grads, state, params, tau=0, scale=1.0):
-        """Apply gradient with step ``alpha(tau)`` (times any extra ``scale``)."""
-        factor = self.schedule(tau) / jnp.float32(self.alpha_c)
-        return self.base.update(grads, state, params, scale=factor * scale)
+        """Apply gradient with step ``alpha(tau)`` (times any extra ``scale``).
 
-    def table(self) -> jnp.ndarray:
+        Bit-identical to running ``chain(scale_by_staleness(schedule,
+        alpha_c), *base_links)`` with ``StepContext(tau=tau, scale=scale)``:
+        the staleness link scales the raw gradient, then the base shim (which
+        keeps the legacy state layout) runs the remaining links.
+        """
+        u, _ = self.link.update(grads, (), params, T.StepContext(tau=tau))
+        return self.base.update(u, state, params, scale=scale)
+
+    def table(self):
         return self.schedule.device_table
 
     # -- Online adaptation (host side, between steps) ------------------------
     def observe(self, tau) -> None:
-        if self.estimator is not None:
-            self.estimator.observe(np.asarray(tau))
+        self.link.observe(tau)
 
     def observe_counts(self, counts) -> None:
         """Merge a pre-binned histogram (the drained in-jit ``AdaptState.hist``)."""
-        if self.estimator is not None:
-            self.estimator.observe_counts(counts)
+        self.link.observe_counts(counts)
 
     def refresh(self, strategy: str = "poisson_momentum", *, family: str = "poisson",
                 K: float | None = None, normalize: bool = True) -> None:
@@ -76,11 +114,7 @@ class MindTheStep:
         ``K`` defaults to ``alpha_c`` (eq. 16/17's momentum magnitude is in
         step-size units; ``K >> alpha_c`` zeroes the table on most taus).
         """
-        assert self.estimator is not None, "construct with an estimator to refresh"
-        self.schedule = self.estimator.rebuild_schedule(
-            strategy, self.alpha_c, family=family,
-            K=self.alpha_c if K is None else K, normalize=normalize,
-        )
+        self.link.refresh(strategy, family=family, K=K, normalize=normalize)
 
 
 def mindthestep(

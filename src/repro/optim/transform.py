@@ -1,0 +1,537 @@
+"""Composable gradient-transform pipeline — the paper's "modularized alpha".
+
+The design insight of MindTheStep (§IV.A) is that the staleness-adaptive step
+``alpha(tau)`` is a *modular* function layered on top of any base SGD update.
+This module makes that modularity literal: every stage of the server update is
+a :class:`GradientTransform` — an ``(init, update)`` pair over update pytrees —
+and :func:`chain` composes them into one pipeline with one signature:
+
+    state   = t.init(params)
+    updates, state = t.update(updates, state, params, ctx)
+
+``ctx`` is a :class:`StepContext` pytree carrying the per-step observations the
+links key on: the scalar staleness ``tau`` (or the per-worker vector ``taus``),
+the jit-resident :class:`~repro.training.adapt.AdaptState` /
+``WorkerAdaptState`` tables, the worker mesh-axis name, and the step RNG.  The
+step builders in :mod:`repro.training.steps` construct the ctx; the links stay
+oblivious to which of the sync / async / sharded_async engines is running.
+
+Link -> paper-equation map
+--------------------------
+================================  =============================================
+link                              paper equivalent
+================================  =============================================
+``scale_by_staleness(schedule)``  eq. (4) / Algorithm 1: ``alpha(tau)/alpha_c``
+                                  from any strategy table — Thm 3 (geometric
+                                  ``C p^tau``), Thm 4/5 (CMP/Poisson implicit-
+                                  momentum cancellation, eq. 16/17), Cor 1/2
+                                  (target-momentum variants), optionally
+                                  normalized per eq. (26) so
+                                  ``E_tau[alpha(tau)] = alpha_c``.  The
+                                  strategy lives in the ``schedule`` table; in
+                                  async modes the gather reads the jit-resident
+                                  ``ctx.adapt.alpha_table`` so a host refresh
+                                  swaps strategies without retracing.
+``drop_stale(tau_drop)``          the drop protocol (§V.C): zero the update
+                                  when ``tau > tau_drop`` (the Fig.-3 runs use
+                                  ``tau_drop = 150``).
+``clip_by_global_norm(c)``        the clip protocol (§V.C): cap the effective
+                                  step (Fig. 3 clips ``alpha(tau)`` at
+                                  ``5 alpha_c``; clipping the update norm is
+                                  the pytree-level generalization).
+``trace(mu)``                     eq. (5) explicit Polyak heavy ball — the
+                                  baseline the paper's *implicit* asynchrony-
+                                  induced momentum (Thm 2) is compared against.
+``scale(-lr)``                    the constant base step ``alpha_c`` of
+                                  eq. (1) — AsyncPSGD's non-adaptive step.
+``scale_by_adam(b1, b2, eps)``    not in the paper: a preconditioner link that
+                                  demonstrates the seam — any base optimizer
+                                  composes with the staleness strategies.
+``fused_apply(lr, mu)``           the parameter-server apply itself, fused:
+                                  one flat-buffer pass (Pallas
+                                  ``adaptive_update`` on TPU) so the server
+                                  occupancy tau_S stays small (§III's
+                                  ``tau = m tau_S`` motivation).
+================================  =============================================
+
+Canonical ordering note: the momentum chain is ``chain(scale(-lr),
+trace(mu))`` — the step size scales the gradient *before* the trace
+accumulates it, so the trace state IS the paper's velocity ``v = mu v -
+alpha g`` (eq. 5) and the legacy ``momentum(lr, mu)`` optimizer is a
+bit-exact shim over it.  The optax-style ordering ``chain(trace(mu),
+scale(-lr))`` keeps the trace in gradient units and matches only to float
+round-off (the recursions are scalar multiples of each other).
+
+Async/sharded absorption: when a pipeline runs inside the async engines, the
+per-worker ``alpha(tau_w)`` weighting must happen *inside* the delayed-ring
+combine (each worker's gradient is weighted before the sum) — so the step
+builder absorbs ``scale_by_staleness`` / ``drop_stale`` into the combine
+weights and sets ``ctx.staleness_applied = True``, under which both links are
+identity.  One pipeline object therefore means the same update in all three
+modes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+Updates = Any
+
+__all__ = [
+    "StepContext",
+    "GradientTransform",
+    "Chain",
+    "chain",
+    "identity",
+    "scale",
+    "trace",
+    "scale_by_staleness",
+    "scale_by_adam",
+    "drop_stale",
+    "clip_by_global_norm",
+    "fused_apply",
+    "global_norm",
+    "pack_flat",
+    "unpack_flat",
+    "apply_updates",
+    "run_pipeline",
+    "staleness_link",
+    "drop_link",
+    "iter_links",
+]
+
+
+# ---------------------------------------------------------------------------
+# Step context: per-step observations shared by every link
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepContext:
+    """Per-step observations threaded through a pipeline.
+
+    Data leaves (may be traced): ``tau`` (scalar staleness, sync/serve path),
+    ``taus`` (the (W,) per-worker staleness vector of the async engines),
+    ``scale`` (extra learning-rate multiplier — the legacy ``scale=`` kwarg;
+    consumed by ``scale``/``fused_apply`` links), ``rng`` (step RNG), and
+    ``adapt`` (the jit-resident AdaptState/WorkerAdaptState, so table gathers
+    survive a host refresh without retracing).
+
+    Static metadata: ``axis_name`` (the worker mesh axis of the sharded
+    engine) and ``staleness_applied`` (True when the step builder already
+    applied the alpha/drop weighting inside the delayed-ring combine —
+    ``scale_by_staleness`` and ``drop_stale`` are then identity).
+    """
+
+    tau: Any = None
+    taus: Any = None
+    scale: Any = 1.0
+    rng: Any = None
+    adapt: Any = None
+    axis_name: str | None = None
+    staleness_applied: bool = False
+
+
+jax.tree_util.register_dataclass(
+    StepContext,
+    data_fields=("tau", "taus", "scale", "rng", "adapt"),
+    meta_fields=("axis_name", "staleness_applied"),
+)
+
+
+# ---------------------------------------------------------------------------
+# The transform protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class GradientTransform:
+    """An (init, update) pair over update pytrees.
+
+    ``update(updates, state, params, ctx) -> (updates, new_state)``.  A link
+    with ``applies_params=True`` is a *terminal* stage: its first return value
+    is the NEW PARAMS (it applied the update itself, e.g. the fused flat-
+    buffer kernel) and it may only appear last in a chain.
+    """
+
+    init: Callable[[Params], Any]
+    update: Callable[[Updates, Any, Params, StepContext], tuple[Updates, Any]]
+    applies_params: bool = False
+    kind: str = ""
+
+
+@dataclasses.dataclass(eq=False)
+class Chain(GradientTransform):
+    links: tuple = ()
+
+
+def chain(*links: GradientTransform) -> Chain:
+    """Compose links left-to-right into one :class:`GradientTransform`.
+
+    State is the tuple of per-link states.  Only the last link may be a
+    terminal (``applies_params``) stage.
+    """
+    links = tuple(links)
+    for link in links[:-1]:
+        assert not link.applies_params, (
+            f"terminal link {link.kind!r} must be the last stage of a chain"
+        )
+
+    def init(params):
+        return tuple(link.init(params) for link in links)
+
+    def update(updates, state, params, ctx=None):
+        ctx = StepContext() if ctx is None else ctx
+        assert len(state) == len(links), (
+            f"chain state has {len(state)} entries for {len(links)} links — "
+            "initialize the optimizer state with this pipeline's init()"
+        )
+        new_states = []
+        for link, s in zip(links, state):
+            updates, s = link.update(updates, s, params, ctx)
+            new_states.append(s)
+        return updates, tuple(new_states)
+
+    return Chain(
+        init=init,
+        update=update,
+        applies_params=bool(links) and links[-1].applies_params,
+        kind="chain",
+        links=links,
+    )
+
+
+def _stateless(update, kind: str, **attrs) -> GradientTransform:
+    t = GradientTransform(init=lambda params: (), update=update, kind=kind)
+    for k, v in attrs.items():
+        setattr(t, k, v)
+    return t
+
+
+def identity() -> GradientTransform:
+    return _stateless(lambda u, s, p, ctx: (u, s), kind="identity")
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities (canonical home; repro.optim.base re-exports them)
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def pack_flat(tree: Params, dtype=jnp.float32) -> jnp.ndarray:
+    """Pack every leaf of ``tree`` into one contiguous 1-D ``dtype`` buffer.
+
+    Thin wrapper over ``jax.flatten_util.ravel_pytree`` (leaf order is
+    ``jax.tree.leaves`` order).  The fused server apply (Pallas
+    ``adaptive_update``) runs over this single buffer in one HBM pass instead
+    of one dispatch per leaf.
+    """
+    from jax.flatten_util import ravel_pytree
+
+    if not jax.tree.leaves(tree):
+        return jnp.zeros((0,), dtype)
+    return ravel_pytree(tree)[0].astype(dtype)
+
+
+def unpack_flat(flat: jnp.ndarray, like: Params) -> Params:
+    """Split a packed buffer back into the shapes/dtypes of ``like``."""
+    from jax.flatten_util import ravel_pytree
+
+    canonical, unravel = ravel_pytree(like)
+    # unravel type-checks its input against the ravel dtype of `like` (e.g.
+    # bf16 params); the cast is the same per-leaf down-cast unravel applies.
+    return unravel(flat.astype(canonical.dtype))
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    """``x <- x + u`` with f32 accumulation, cast back to the param dtype."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )
+
+
+def run_pipeline(pipeline: GradientTransform, grads, opt_state, params, ctx=None):
+    """Run a pipeline over raw gradients and apply: ``(new_params, new_state)``.
+
+    A terminal (``applies_params``) pipeline already returns new params;
+    otherwise the accumulated updates are applied with f32 accumulation.
+    """
+    updates, new_state = pipeline.update(grads, opt_state, params, ctx)
+    if pipeline.applies_params:
+        return updates, new_state
+    return apply_updates(params, updates), new_state
+
+
+# ---------------------------------------------------------------------------
+# Scaling links
+# ---------------------------------------------------------------------------
+
+def scale(factor: float) -> GradientTransform:
+    """Multiply updates by ``factor * ctx.scale`` — the base step ``alpha_c``.
+
+    ``ctx.scale`` (the legacy runtime ``scale=`` multiplier) is consumed here,
+    so a chain should contain exactly one ``scale``/``fused_apply`` link.
+    """
+    f = float(factor)
+
+    def update(u, s, params, ctx):
+        m = jnp.float32(f) * ctx.scale
+        return jax.tree.map(lambda l: m * l.astype(jnp.float32), u), s
+
+    return _stateless(update, kind="scale", factor=f)
+
+
+def trace(mu: float) -> GradientTransform:
+    """Polyak heavy-ball accumulator (paper eq. 5): ``v <- mu v + u; out = v``.
+
+    Placed after ``scale(-lr)`` the state is the paper's velocity
+    ``v = mu v - alpha g`` and the legacy ``momentum`` optimizer is a
+    bit-exact shim over the chain.
+    """
+    mu = float(mu)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(u, v, params, ctx):
+        v2 = jax.tree.map(lambda v_, u_: mu * v_ + u_.astype(jnp.float32), v, u)
+        return v2, v2
+
+    return GradientTransform(init=init, update=update, kind="trace")
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    """Cap the global update norm (the paper's §V.C clip protocol, pytree-wise)."""
+    max_norm = float(max_norm)
+
+    def update(u, s, params, ctx):
+        n = global_norm(u)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+        return jax.tree.map(lambda l: l * factor.astype(l.dtype), u), s
+
+    return _stateless(update, kind="clip", max_norm=max_norm)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-keyed links (absorbed into the combine weights in async modes)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class StalenessTransform(GradientTransform):
+    """``scale_by_staleness`` link: carries the strategy + the online hooks.
+
+    Duck-types the refresh interface of the legacy
+    :class:`~repro.optim.mindthestep.MindTheStep` wrapper (``estimator``,
+    ``alpha_c``, ``schedule``, ``observe``/``observe_counts``/``refresh``),
+    so :func:`repro.training.adapt.host_refresh` and
+    :func:`~repro.training.adapt.worker_host_refresh` accept the link — or a
+    whole chain containing it — directly.
+    """
+
+    schedule: Any = None
+    alpha_c: float = 1.0
+    estimator: Any = None
+
+    # -- online-adaptation hooks (host side, between steps) ------------------
+    def observe(self, tau) -> None:
+        if self.estimator is not None:
+            self.estimator.observe(np.asarray(tau))
+
+    def observe_counts(self, counts) -> None:
+        """Merge a pre-binned histogram (the drained in-jit ``AdaptState.hist``)."""
+        if self.estimator is not None:
+            self.estimator.observe_counts(counts)
+
+    def refresh(self, strategy: str = "poisson_momentum", *, family: str = "poisson",
+                K: float | None = None, normalize: bool = True) -> None:
+        """Refit the staleness model from observations and rebuild alpha(tau).
+
+        ``K`` defaults to ``alpha_c`` (eq. 16/17's momentum magnitude is in
+        step-size units; ``K >> alpha_c`` zeroes the table on most taus).
+        """
+        assert self.estimator is not None, "construct with m= (an estimator) to refresh"
+        self.schedule = self.estimator.rebuild_schedule(
+            strategy, self.alpha_c, family=family,
+            K=self.alpha_c if K is None else K, normalize=normalize,
+        )
+
+
+def scale_by_staleness(
+    schedule=None,
+    alpha_c: float = 1.0,
+    *,
+    m: int | None = None,
+    tau_max: int = 256,
+) -> StalenessTransform:
+    """Multiply updates by ``alpha(tau) / alpha_c`` (paper eq. 4 / Alg. 1).
+
+    ``schedule`` is a :class:`repro.core.step_size.StepSizeSchedule` built from
+    any strategy (Thm 3/4/5, Cor 1/2, eq.-26 normalization).  The gather
+    prefers the jit-resident ``ctx.adapt.alpha_table`` (a step input — a host
+    refresh swaps strategies without retracing); the static ``schedule`` table
+    is the fallback for ctx-less sync use.  Pass ``m`` to attach an
+    :class:`~repro.core.estimator.OnlineStalenessEstimator` for the paper's
+    §IV online loop (drained by ``host_refresh`` at refresh boundaries).
+
+    In async modes the step builder absorbs this link into the delayed-ring
+    combine weights (``ctx.staleness_applied`` -> identity here).
+    """
+    if m is not None:
+        from repro.core.estimator import OnlineStalenessEstimator
+
+        estimator = OnlineStalenessEstimator(m=m, tau_max=tau_max)
+    else:
+        estimator = None
+
+    link = StalenessTransform(
+        init=lambda params: (),
+        update=None,  # bound below (late-binds link.schedule for refresh())
+        kind="staleness",
+        schedule=schedule,
+        alpha_c=float(alpha_c),
+        estimator=estimator,
+    )
+
+    def update(u, s, params, ctx):
+        if ctx.staleness_applied:
+            return u, s
+        tau = 0 if ctx.tau is None else ctx.tau
+        if ctx.adapt is not None:
+            table = ctx.adapt.alpha_table
+            alpha = table[jnp.clip(tau, 0, table.shape[0] - 1)]
+        else:
+            assert link.schedule is not None, (
+                "scale_by_staleness without a schedule needs ctx.adapt "
+                "(the jit-resident alpha table)"
+            )
+            alpha = link.schedule(tau)
+        factor = alpha / jnp.float32(link.alpha_c)
+        return jax.tree.map(lambda l: factor * l.astype(jnp.float32), u), s
+
+    link.update = update
+    return link
+
+
+def drop_stale(tau_drop: int) -> GradientTransform:
+    """Zero the update when ``tau > tau_drop`` — the paper's §V.C drop rule.
+
+    In async modes the step builder absorbs this link into the per-worker
+    combine weights (each worker's delayed gradient is dropped individually).
+    """
+    tau_drop = int(tau_drop)
+
+    def update(u, s, params, ctx):
+        if ctx.staleness_applied:
+            return u, s
+        tau = 0 if ctx.tau is None else ctx.tau
+        keep = (jnp.asarray(tau) <= tau_drop).astype(jnp.float32)
+        return jax.tree.map(lambda l: l * keep, u), s
+
+    return _stateless(update, kind="drop", tau_drop=tau_drop)
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner link (proves the seam: any base optimizer chains in)
+# ---------------------------------------------------------------------------
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransform:
+    """Adam direction ``m_hat / (sqrt(v_hat) + eps)`` (state: m, v, t)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(u, state, params, ctx):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], u)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], u)
+        tf = t.astype(jnp.float32)
+        mhat_c = 1.0 / (1.0 - b1**tf)
+        vhat_c = 1.0 / (1.0 - b2**tf)
+        out = jax.tree.map(
+            lambda m_, v_: (m_ * mhat_c) / (jnp.sqrt(v_ * vhat_c) + eps), m, v
+        )
+        return out, {"m": m, "v": v, "t": t}
+
+    return GradientTransform(init=init, update=update, kind="adam")
+
+
+# ---------------------------------------------------------------------------
+# Terminal stage: the fused parameter-server apply
+# ---------------------------------------------------------------------------
+
+def fused_apply(lr: float, mu: float = 0.0) -> GradientTransform:
+    """Terminal stage: fused flat-buffer momentum apply (Pallas on TPU).
+
+    The velocity lives as ONE flat f32 buffer and scale + momentum + apply is
+    a single pass over it (:mod:`repro.kernels.adaptive_update`) instead of a
+    per-leaf ``tree.map`` dispatch — the paper's "the server apply must be
+    fast so tau_S stays small" requirement.  Accepts the incoming update
+    either as a pytree matching ``params`` or already packed flat (callers
+    that keep gradients flat-resident skip the per-step pack).  ``ctx.scale``
+    multiplies the learning rate, exactly like the ``scale`` link.
+
+    Returns NEW PARAMS (``applies_params=True``); must be last in a chain.
+    """
+    lr, mu = float(lr), float(mu)
+
+    def init(params):
+        n = sum(int(np.prod(l.shape)) if l.shape else 1 for l in jax.tree.leaves(params))
+        return jnp.zeros((n,), jnp.float32)
+
+    def update(u, v_flat, params, ctx):
+        from repro.kernels.adaptive_update.ops import adaptive_update_flat
+
+        if isinstance(u, jax.Array) and u.ndim == 1:
+            g_flat = u.astype(jnp.float32)
+        else:
+            g_flat = pack_flat(u)
+        p_flat = pack_flat(params)
+        alpha = jnp.asarray(lr, jnp.float32) * ctx.scale
+        p_new, v_new = adaptive_update_flat(p_flat, g_flat, v_flat, alpha, jnp.float32(mu))
+        return unpack_flat(p_new, params), v_new
+
+    return GradientTransform(
+        init=init, update=update, applies_params=True, kind="fused_apply"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline introspection (used by the step builders and the refresh boundary)
+# ---------------------------------------------------------------------------
+
+def iter_links(pipeline):
+    if isinstance(pipeline, Chain):
+        for link in pipeline.links:
+            yield from iter_links(link)
+    elif isinstance(pipeline, GradientTransform):
+        yield pipeline
+
+
+def staleness_link(pipeline) -> StalenessTransform | None:
+    """The first ``scale_by_staleness`` link of a pipeline (or None)."""
+    for link in iter_links(pipeline):
+        if link.kind == "staleness":
+            return link
+    return None
+
+
+def drop_link(pipeline) -> GradientTransform | None:
+    """The first ``drop_stale`` link of a pipeline (or None)."""
+    for link in iter_links(pipeline):
+        if link.kind == "drop":
+            return link
+    return None

@@ -8,12 +8,21 @@ only every ``refresh_every`` steps, where :func:`~repro.training.adapt
 .host_refresh` drains the in-jit histogram, refits the staleness model, and
 feeds fresh tables back in as ordinary step inputs — no per-step blocking
 device->host transfer, no retrace.
+
+Refresh plumbing takes the *pipeline* itself: pass the ``chain(...)`` the
+step was built from (or its ``scale_by_staleness`` link, or a legacy
+``MindTheStep`` wrapper) as ``pipeline=`` — the loop finds the staleness link
+and drives the right refresh boundary for the state's adapt type
+(``host_refresh`` for :class:`~repro.training.adapt.AdaptState`,
+``worker_host_refresh`` for ``WorkerAdaptState``).  The old ``mts=`` kwarg
+remains as a deprecated alias.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Iterable
 
 import jax
@@ -22,29 +31,64 @@ import numpy as np
 __all__ = ["train_loop"]
 
 
+def _refresher_of(pipeline):
+    """The refresh-capable handle of ``pipeline``: a scale_by_staleness link
+    (possibly inside a chain) or a legacy MindTheStep-style wrapper."""
+    from repro.optim import transform as T
+
+    if isinstance(pipeline, T.GradientTransform):
+        link = T.staleness_link(pipeline)
+        assert link is not None, (
+            "refresh_every set but the pipeline has no scale_by_staleness link"
+        )
+        return link
+    return pipeline  # MindTheStep duck type (estimator/alpha_c/refresh/schedule)
+
+
 def train_loop(
     step_fn: Callable,
     state,
     batches: Iterable[Any],
     *,
     num_steps: int,
-    mts=None,
+    pipeline=None,
     refresh_every: int = 0,
     refresh_kwargs: dict | None = None,
+    mesh=None,
     log_every: int = 50,
     logger: Callable[[str], None] = print,
     checkpoint_fn: Callable[[Any, int], None] | None = None,
     checkpoint_every: int = 0,
+    mts=None,
 ) -> tuple[Any, list[dict]]:
     """Run ``num_steps`` of ``step_fn`` over ``batches``; returns (state, history).
 
-    Pass ``mts`` (a :class:`~repro.optim.mindthestep.MindTheStep` with an
-    estimator) plus ``refresh_every`` to enable online adaptation: the state
-    must carry an :class:`~repro.training.adapt.AdaptState` (``state.adapt``),
-    which is refreshed in place of the old closure-swap — the jitted step is
-    never re-traced.
+    Pass ``pipeline`` (the chain the step was built from — its
+    ``scale_by_staleness(..., m=...)`` link must carry an estimator) plus
+    ``refresh_every`` to enable online adaptation: the state must carry an
+    :class:`~repro.training.adapt.AdaptState` or ``WorkerAdaptState``
+    (``state.adapt``), which is refreshed in place of the old closure-swap —
+    the jitted step is never re-traced.  ``mesh`` is only consulted for the
+    sharded engine's histogram psum-merge.
+
+    ``mts=`` (a legacy :class:`~repro.optim.mindthestep.MindTheStep`) is a
+    deprecated alias for ``pipeline=``.
     """
-    from repro.training.adapt import host_refresh
+    from repro.training.adapt import WorkerAdaptState, host_refresh, worker_host_refresh
+
+    if mts is not None:
+        warnings.warn(
+            "train_loop(mts=...) is deprecated; pass the gradient-transform "
+            "pipeline (or its scale_by_staleness link) as pipeline=",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        assert pipeline is None, "pass either pipeline= or the deprecated mts=, not both"
+        pipeline = mts
+
+    refresher = None
+    if pipeline is not None and refresh_every:
+        refresher = _refresher_of(pipeline)
 
     history: list[dict] = []
     jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
@@ -54,18 +98,18 @@ def train_loop(
     for i in range(num_steps):
         batch = next(it)
         state, metrics = jitted(state, batch)
-        if mts is not None and refresh_every and (i + 1) % refresh_every == 0:
+        if refresher is not None and (i + 1) % refresh_every == 0:
             adapt = getattr(state, "adapt", None)
             assert adapt is not None, (
                 "refresh_every set but the state carries no AdaptState — "
                 "build it with init_adapt/make_adapt and pass it to init_train_state"
             )
-            state = dataclasses.replace(
-                state,
-                adapt=host_refresh(
-                    adapt, mts, **{"logger": logger, **(refresh_kwargs or {})}
-                ),
-            )
+            kwargs = {"logger": logger, **(refresh_kwargs or {})}
+            if isinstance(adapt, WorkerAdaptState):
+                new_adapt = worker_host_refresh(adapt, refresher, mesh=mesh, **kwargs)
+            else:
+                new_adapt = host_refresh(adapt, refresher, **kwargs)
+            state = dataclasses.replace(state, adapt=new_adapt)
         if (i + 1) % log_every == 0 or i == num_steps - 1:
             host = {k: float(np.asarray(v)) for k, v in metrics.items()}
             host["step"] = i + 1

@@ -1,11 +1,12 @@
 """Train / serve step factories — the jit boundaries of the framework.
 
-Three step kinds:
+One builder, :func:`make_step`, produces the training step for every engine
+from a single gradient-transform pipeline (:mod:`repro.optim.transform`):
 
-* ``make_train_step``       — synchronous data-parallel step (the SyncPSGD
+* ``mode="sync"``          — synchronous data-parallel step (the SyncPSGD
   baseline of paper §III; on the mesh, the batch axis IS the worker axis and
   Theorem 1's effective batch is explicit).
-* ``make_async_train_step`` — MindTheStep-AsyncPSGD on the mesh: per step a
+* ``mode="async"``         — MindTheStep-AsyncPSGD on the mesh: per step a
   *vector* of ``W`` worker staleness values is sampled in-jit from the CDF
   table in ``state.adapt``, the matching ``W`` delayed gradients are popped
   from the ring and applied as an ``alpha(tau)``-weighted average (paper
@@ -13,8 +14,22 @@ Three step kinds:
   All adaptation artifacts — alpha table, tau CDF, staleness histogram — ride
   in :class:`~repro.training.adapt.AdaptState` as step INPUTS, so a host-side
   ``refresh()`` swaps them without retracing the compiled step.
-* ``make_serve_step``       — one decode step against a KV cache (inference
-  shapes ``decode_32k`` / ``long_500k``).
+* ``mode="sharded_async"`` — the same W-worker simulation under ``shard_map``
+  over a ``workers`` mesh axis: per-worker rings, heterogeneous tau samplers,
+  per-worker histograms, one ``lax.psum`` merge.
+
+The async modes derive the per-worker weighting from the pipeline itself: a
+``scale_by_staleness`` link is absorbed into the delayed-ring combine weights
+(``alpha(tau_w) / (alpha_c W)``, gathered from the jit-resident table) and a
+``drop_stale`` link into the per-worker drop mask; the pipeline then runs on
+the combined ``g_eff`` with ``ctx.staleness_applied = True``.  The legacy
+factories (``make_train_step`` / ``make_async_train_step`` /
+``make_sharded_async_train_step``) are kept as one-line shims and accept both
+pipelines and legacy :class:`~repro.optim.base.Optimizer` shims —
+trajectories are bit-identical either way.
+
+``make_serve_step`` — one decode step against a KV cache (inference shapes
+``decode_32k`` / ``long_500k``).
 
 Each factory returns a pure function suitable for ``jax.jit`` with explicit
 in/out shardings supplied by the launcher.
@@ -37,6 +52,7 @@ from repro.async_engine.delayed import (
     worker_ring_combine,
 )
 from repro.models import model as M
+from repro.optim import transform as T
 from repro.optim.base import Optimizer
 from repro.training.adapt import (
     AdaptState,
@@ -52,11 +68,14 @@ __all__ = [
     "TrainState",
     "init_train_state",
     "init_sharded_async_state",
+    "make_step",
     "make_train_step",
     "make_async_train_step",
     "make_sharded_async_train_step",
     "make_serve_step",
 ]
+
+MODES = ("sync", "async", "sharded_async")
 
 
 @jax.tree_util.register_dataclass
@@ -73,12 +92,15 @@ class TrainState:
 def init_train_state(
     key: jax.Array,
     cfg,
-    opt: Optimizer,
+    opt,
     *,
     async_ring: int = 0,
     adapt: AdaptState | None = None,
     params: Any | None = None,
 ) -> TrainState:
+    """``opt`` is either a legacy :class:`Optimizer` or a pipeline
+    (:class:`~repro.optim.transform.GradientTransform`) — both expose
+    ``init(params) -> opt_state``."""
     kp, kr = jax.random.split(key)
     if params is None:
         params = M.init_model(kp, cfg)
@@ -117,144 +139,163 @@ def _constrain_grads(grads, cfg):
     return jax.tree.map(jax.lax.with_sharding_constraint, grads, shardings)
 
 
-def make_train_step(cfg, opt: Optimizer) -> Callable:
-    """Synchronous step: loss -> grad -> optimizer. Batch is globally sharded
-    over (pod, data); XLA inserts the gradient all-reduce."""
+def _resolve_pipeline(pipeline):
+    """Normalize either API to ``(apply_fn, transform)``.
 
-    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
-        def lf(p):
-            return M.loss_fn(p, batch, cfg)
+    ``apply_fn(grads, opt_state, params, ctx) -> (new_params, new_opt_state)``.
+    Legacy :class:`Optimizer` / :class:`MindTheStep` shims apply internally
+    (their shimmed pipelines make this bit-identical to the chain path);
+    bare :class:`GradientTransform` pipelines run through
+    :func:`repro.optim.transform.run_pipeline`.  ``transform`` is the
+    introspectable pipeline (the shim's inner chain for legacy optimizers) —
+    links are searched RECURSIVELY, so nested chains resolve the same way
+    everywhere (same traversal as ``T.staleness_link``, which the
+    ``train_loop`` refresh path uses).
+    """
+    if isinstance(pipeline, T.GradientTransform):
+        def apply_fn(grads, opt_state, params, ctx):
+            return T.run_pipeline(pipeline, grads, opt_state, params, ctx)
 
-        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
-        grads = _constrain_grads(grads, cfg)
-        new_params, new_opt = opt.update(grads, state.opt_state, state.params)
-        new_state = TrainState(
-            params=new_params, opt_state=new_opt, step=state.step + 1,
-            rng=state.rng, delayed=state.delayed, adapt=state.adapt,
-        )
-        return new_state, {"loss": loss, **metrics}
+        return apply_fn, pipeline
 
-    return train_step
+    assert isinstance(pipeline, Optimizer) or hasattr(pipeline, "update"), (
+        f"make_step needs a GradientTransform or Optimizer, got {type(pipeline)!r}"
+    )
+
+    def apply_fn(grads, opt_state, params, ctx):
+        return pipeline.update(grads, opt_state, params)
+
+    return apply_fn, getattr(pipeline, "pipeline", None)
 
 
-def make_async_train_step(
+def _resolve_alpha_c(alpha_c, transform) -> float:
+    if alpha_c is not None:
+        return float(alpha_c)
+    link = T.staleness_link(transform) if transform is not None else None
+    return float(link.alpha_c) if link is not None else 1.0
+
+
+def _drop_mask(transform, taus):
+    """Per-worker keep mask from any ``drop_stale`` link (absorbed here)."""
+    link = T.drop_link(transform) if transform is not None else None
+    if link is None:
+        return None
+    return (taus <= link.tau_drop).astype(jnp.float32)
+
+
+def _check_absorbable_order(transform, mode):
+    """Mode-equivalence guard for the async engines.
+
+    Absorbing ``scale_by_staleness``/``drop_stale`` into the combine weights
+    moves them to the FRONT of the update — equivalent to the sync chain only
+    when nothing precedes them but other absorbed links (the factors would
+    otherwise have to commute through a stateful or norm-dependent stage,
+    e.g. clip or the adam preconditioner).  Reject misordered chains instead
+    of silently running a different update per mode.
+    """
+    if transform is None:
+        return
+    kinds = [link.kind for link in T.iter_links(transform)]
+    non_absorbed = [i for i, k in enumerate(kinds) if k not in ("staleness", "drop", "identity")]
+    misordered = non_absorbed and any(
+        k in ("staleness", "drop") for k in kinds[non_absorbed[0]:]
+    )
+    assert not misordered, (
+        f"mode={mode!r} absorbs scale_by_staleness/drop_stale into the "
+        f"delayed-ring combine weights (the front of the update), but this "
+        f"pipeline places one after a {kinds[non_absorbed[0]]!r} link "
+        f"(chain order: {kinds}) — put the staleness/drop links first"
+    )
+
+
+def make_step(
     cfg,
-    opt: Optimizer,
+    pipeline,
     *,
-    alpha_c: float,
+    mode: str = "sync",
+    alpha_c: float | None = None,
     num_workers: int = 1,
-) -> Callable:
-    """MindTheStep-AsyncPSGD step (async-as-delay on the mesh).
-
-    Per step: compute the gradient at the current params, push to the ring,
-    sample ``num_workers`` staleness values from the CDF table in
-    ``state.adapt``, pop the matching delayed gradients, and apply their
-    ``alpha(tau)``-weighted average
-
-        g_eff = (1/W) sum_w  alpha(tau_w)/alpha_c * live_w * g_{t - tau_w}
-
-    (``live`` zeroes warmup / beyond-ring workers — the paper's drop rule).
-    Observed taus are scatter-added into the in-jit histogram; NOTHING is
-    transferred to the host per step.  The alpha table and tau CDF are read
-    from ``state.adapt``, so a host-side refresh swaps them as ordinary step
-    inputs — no retrace, no recompile.
-    """
-    W = int(num_workers)
-    assert W >= 1
-
-    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
-        assert state.adapt is not None, "async step needs TrainState.adapt (see init_adapt)"
-        assert state.delayed is not None, "async step needs a delayed ring (async_ring > 0)"
-
-        def lf(p):
-            return M.loss_fn(p, batch, cfg)
-
-        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
-        grads = _constrain_grads(grads, cfg)
-        rng, sub = jax.random.split(state.rng)
-        taus = sample_taus(sub, state.adapt.tau_cdf, W)
-        alpha = alpha_lookup(state.adapt, taus)
-        weights = alpha / jnp.float32(alpha_c * W)
-        g_eff, live, new_ring = delayed_combine(state.delayed, grads, taus, weights)
-        adapt = record_taus(state.adapt, taus)
-        new_params, new_opt = opt.update(g_eff, state.opt_state, state.params)
-        new_state = TrainState(
-            params=new_params, opt_state=new_opt, step=state.step + 1,
-            rng=rng, delayed=new_ring, adapt=adapt,
-        )
-        return new_state, {
-            "loss": loss,
-            "tau_mean": jnp.mean(taus.astype(jnp.float32)),
-            "alpha_mean": jnp.mean(alpha),
-            "live_frac": jnp.mean(live),
-            **metrics,
-        }
-
-    return train_step
-
-
-def init_sharded_async_state(
-    key: jax.Array,
-    cfg,
-    opt: Optimizer,
-    *,
-    ring: int,
-    adapt: WorkerAdaptState,
-    params: Any | None = None,
     mesh=None,
-) -> TrainState:
-    """TrainState for the sharded engine: per-worker rings + WorkerAdaptState.
-
-    The worker count is taken from ``adapt``; ring leaves are (W, K, ...).
-    Pass ``mesh`` (with a ``workers`` axis) to place every worker-axis leaf
-    with :func:`repro.sharding.specs.worker_shardings` up front — otherwise
-    the first compiled step pays a one-time reshard.
-    """
-    state = init_train_state(key, cfg, opt, async_ring=0, adapt=adapt, params=params)
-    wring = init_worker_ring(state.params, ring, adapt.num_workers)
-    if mesh is not None and "workers" in getattr(mesh, "axis_names", ()):
-        from repro.sharding.specs import worker_shardings
-
-        wring = dataclasses.replace(
-            wring, ring=jax.device_put(wring.ring, worker_shardings(wring.ring, mesh))
-        )
-        placed = {
-            f: jax.device_put(v, worker_shardings(v, mesh))
-            for f, v in (
-                ("tau_cdf", adapt.tau_cdf), ("tau_trace", adapt.tau_trace),
-                ("use_trace", adapt.use_trace), ("hist", adapt.hist),
-            )
-        }
-        state = dataclasses.replace(state, adapt=dataclasses.replace(adapt, **placed))
-    return dataclasses.replace(state, delayed=wring)
-
-
-def make_sharded_async_train_step(
-    cfg,
-    opt: Optimizer,
-    *,
-    alpha_c: float,
-    mesh,
     axis_name: str = "workers",
 ) -> Callable:
-    """MindTheStep-AsyncPSGD sharded over a ``workers`` mesh axis.
+    """One step builder for every engine: ``(TrainState, batch) -> (TrainState, metrics)``.
 
-    The scalar-engine semantics of :func:`make_async_train_step`, with the
-    W-worker simulation executed under ``shard_map``: every device owns
-    ``W / |workers|`` worker rings, heterogeneous tau samplers (per-worker
-    CDF rows or trace replay — see :class:`WorkerAdaptState`), and histogram
-    rows.  Per tick each shard pushes the fresh gradient into its local rings,
-    samples its workers' taus, pops + alpha-weights its delayed gradients, and
-    a single ``lax.psum`` merges the partial sums into the global
-
-        g_eff = (1/W) sum_w alpha(tau_w)/alpha_c * live_w * g_{t - tau_w}
-
-    Histograms stay per-worker on-shard; they are psum-merged only at
-    ``worker_host_refresh`` boundaries.  On a 1-device mesh with homogeneous
-    CDF samplers this reproduces the single-shard trajectory bit-exactly
-    (regression-tested), because the gathers, weights, and the tensordot
-    contraction are the same ops on the same values.
+    ``pipeline`` is a :class:`~repro.optim.transform.GradientTransform`
+    (usually from ``chain(...)``) or a legacy :class:`Optimizer` shim.
+    ``alpha_c`` defaults to the pipeline's ``scale_by_staleness`` link (1.0
+    if absent); ``num_workers`` is the simulated worker count of
+    ``mode="async"`` (the sharded mode takes W from ``state.adapt``);
+    ``mesh``/``axis_name`` wire the ``workers`` mesh axis of
+    ``mode="sharded_async"``.
     """
+    assert mode in MODES, f"mode must be one of {MODES}, got {mode!r}"
+    apply_fn, transform = _resolve_pipeline(pipeline)
+    alpha_c = _resolve_alpha_c(alpha_c, transform)
+    if mode != "sync":
+        _check_absorbable_order(transform, mode)
+
+    def loss_and_grads(params, batch):
+        def lf(p):
+            return M.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, metrics, _constrain_grads(grads, cfg)
+
+    if mode == "sync":
+
+        def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+            loss, metrics, grads = loss_and_grads(state.params, batch)
+            ctx = T.StepContext(adapt=state.adapt, rng=state.rng)
+            new_params, new_opt = apply_fn(grads, state.opt_state, state.params, ctx)
+            new_state = TrainState(
+                params=new_params, opt_state=new_opt, step=state.step + 1,
+                rng=state.rng, delayed=state.delayed, adapt=state.adapt,
+            )
+            return new_state, {"loss": loss, **metrics}
+
+        return train_step
+
+    if mode == "async":
+        W = int(num_workers)
+        assert W >= 1
+
+        def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+            assert state.adapt is not None, (
+                "async step needs TrainState.adapt (see init_adapt)"
+            )
+            assert state.delayed is not None, (
+                "async step needs a delayed ring (async_ring > 0)"
+            )
+            loss, metrics, grads = loss_and_grads(state.params, batch)
+            rng, sub = jax.random.split(state.rng)
+            taus = sample_taus(sub, state.adapt.tau_cdf, W)
+            alpha = alpha_lookup(state.adapt, taus)
+            weights = alpha / jnp.float32(alpha_c * W)
+            keep = _drop_mask(transform, taus)
+            if keep is not None:
+                weights = weights * keep
+            g_eff, live, new_ring = delayed_combine(state.delayed, grads, taus, weights)
+            adapt = record_taus(state.adapt, taus)
+            ctx = T.StepContext(
+                taus=taus, adapt=adapt, rng=rng, staleness_applied=True
+            )
+            new_params, new_opt = apply_fn(g_eff, state.opt_state, state.params, ctx)
+            new_state = TrainState(
+                params=new_params, opt_state=new_opt, step=state.step + 1,
+                rng=rng, delayed=new_ring, adapt=adapt,
+            )
+            return new_state, {
+                "loss": loss,
+                "tau_mean": jnp.mean(taus.astype(jnp.float32)),
+                "alpha_mean": jnp.mean(alpha),
+                "live_frac": jnp.mean(live),
+                **metrics,
+            }
+
+        return train_step
+
+    # mode == "sharded_async"
+    assert mesh is not None, "sharded_async mode needs the workers mesh"
     from jax.sharding import PartitionSpec as P
 
     from repro.sharding.ctx import shard_map_compat
@@ -270,11 +311,7 @@ def make_sharded_async_train_step(
         )
         W = adapt.num_workers
 
-        def lf(p):
-            return M.loss_fn(p, batch, cfg)
-
-        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
-        grads = _constrain_grads(grads, cfg)
+        loss, metrics, grads = loss_and_grads(state.params, batch)
         rng, sub = jax.random.split(state.rng)
         u = jax.random.uniform(sub, (W,))
 
@@ -285,6 +322,9 @@ def make_sharded_async_train_step(
             taus = sample_worker_taus(u, cdf, trace, flags, step)
             alpha = alpha_table[jnp.clip(taus, 0, alpha_table.shape[0] - 1)]
             weights = alpha / jnp.float32(alpha_c * W)
+            keep = _drop_mask(transform, taus)
+            if keep is not None:
+                weights = weights * keep
             g_eff, live, new_ring = worker_ring_combine(
                 ring_leaves, step, grads, taus, weights, axis_name=axis_name
             )
@@ -318,7 +358,10 @@ def make_sharded_async_train_step(
             use_trace=adapt.use_trace,
             hist=new_hist,
         )
-        new_params, new_opt = opt.update(g_eff, state.opt_state, state.params)
+        ctx = T.StepContext(
+            adapt=new_adapt, rng=rng, axis_name=axis_name, staleness_applied=True
+        )
+        new_params, new_opt = apply_fn(g_eff, state.opt_state, state.params, ctx)
         new_state = TrainState(
             params=new_params, opt_state=new_opt, step=state.step + 1,
             rng=rng, delayed=WorkerRing(ring=new_ring, step=ring.step + 1),
@@ -333,6 +376,68 @@ def make_sharded_async_train_step(
         }
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Legacy factory shims (one PR of call sites each; prefer make_step)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt) -> Callable:
+    """Synchronous step: loss -> grad -> pipeline. Batch is globally sharded
+    over (pod, data); XLA inserts the gradient all-reduce."""
+    return make_step(cfg, opt, mode="sync")
+
+
+def make_async_train_step(cfg, opt, *, alpha_c: float, num_workers: int = 1) -> Callable:
+    """MindTheStep-AsyncPSGD step (async-as-delay on the mesh); see
+    :func:`make_step` ``mode="async"``."""
+    return make_step(cfg, opt, mode="async", alpha_c=alpha_c, num_workers=num_workers)
+
+
+def make_sharded_async_train_step(
+    cfg, opt, *, alpha_c: float, mesh, axis_name: str = "workers"
+) -> Callable:
+    """MindTheStep-AsyncPSGD sharded over a ``workers`` mesh axis; see
+    :func:`make_step` ``mode="sharded_async"``."""
+    return make_step(
+        cfg, opt, mode="sharded_async", alpha_c=alpha_c, mesh=mesh, axis_name=axis_name
+    )
+
+
+def init_sharded_async_state(
+    key: jax.Array,
+    cfg,
+    opt,
+    *,
+    ring: int,
+    adapt: WorkerAdaptState,
+    params: Any | None = None,
+    mesh=None,
+) -> TrainState:
+    """TrainState for the sharded engine: per-worker rings + WorkerAdaptState.
+
+    The worker count is taken from ``adapt``; ring leaves are (W, K, ...).
+    Pass ``mesh`` (with a ``workers`` axis) to place every worker-axis leaf
+    with :func:`repro.sharding.specs.worker_shardings` up front — otherwise
+    the first compiled step pays a one-time reshard.
+    """
+    state = init_train_state(key, cfg, opt, async_ring=0, adapt=adapt, params=params)
+    wring = init_worker_ring(state.params, ring, adapt.num_workers)
+    if mesh is not None and "workers" in getattr(mesh, "axis_names", ()):
+        from repro.sharding.specs import worker_shardings
+
+        wring = dataclasses.replace(
+            wring, ring=jax.device_put(wring.ring, worker_shardings(wring.ring, mesh))
+        )
+        placed = {
+            f: jax.device_put(v, worker_shardings(v, mesh))
+            for f, v in (
+                ("tau_cdf", adapt.tau_cdf), ("tau_trace", adapt.tau_trace),
+                ("use_trace", adapt.use_trace), ("hist", adapt.hist),
+            )
+        }
+        state = dataclasses.replace(state, adapt=dataclasses.replace(adapt, **placed))
+    return dataclasses.replace(state, delayed=wring)
 
 
 def make_serve_step(cfg) -> Callable:

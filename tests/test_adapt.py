@@ -21,12 +21,14 @@ from repro.core.staleness import Poisson
 from repro.core.step_size import make_schedule
 from repro.data import lm_batches
 from repro.optim import mindthestep, momentum, pack_flat, sgd, unpack_flat
+from repro.optim import transform as T
 from repro.training import (
     host_refresh,
     init_adapt,
     init_train_state,
     make_adapt,
     make_async_train_step,
+    make_step,
     sample_taus,
     train_loop,
 )
@@ -351,6 +353,195 @@ class TestFusedOptimizer:
             state, m = step(state, next(batches))
         assert bool(jnp.isfinite(m["loss"]))
         assert state.opt_state.ndim == 1  # velocity is flat-resident
+
+
+class TestMakeStepParity:
+    """API-redesign acceptance: the legacy step factories and chain-based
+    make_step produce BIT-IDENTICAL trajectories (1-device mesh)."""
+
+    def _setup(self, small_cfg, opt_or_pipe, ring=8, tau_max=31):
+        model = Poisson(4.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=0.05, tau_max=tau_max)
+        adapt = make_adapt(sched, model, cdf_support=ring, tau_max=tau_max)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt_or_pipe, async_ring=ring, adapt=adapt
+        )
+        return sched, state
+
+    def _compare_trajectories(self, small_cfg, step1, s1, step2, s2, n=6):
+        b1 = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        b2 = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        for t in range(n):
+            s1, m1 = step1(s1, next(b1))
+            s2, m2 = step2(s2, next(b2))
+            for x, y in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y), err_msg=f"diverged at step {t}"
+                )
+            assert float(m1["loss"]) == float(m2["loss"])
+        np.testing.assert_array_equal(np.asarray(s1.adapt.hist), np.asarray(s2.adapt.hist))
+
+    def test_async_chain_matches_legacy_momentum_factory(self, small_cfg):
+        """The acceptance chain (staleness + never-binding clip + momentum
+        links) == make_async_train_step(momentum), bit-exactly: the staleness
+        link is absorbed into the combine weights."""
+        opt = momentum(0.05, 0.9)
+        sched, s1 = self._setup(small_cfg, opt)
+        pipe = T.chain(
+            T.scale_by_staleness(sched, 0.05),
+            T.clip_by_global_norm(1e9),
+            T.scale(-0.05),
+            T.trace(0.9),
+        )
+        _, s2 = self._setup(small_cfg, pipe)
+        step1 = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4))
+        step2 = jax.jit(make_step(small_cfg, pipe, mode="async", num_workers=4))
+        self._compare_trajectories(small_cfg, step1, s1, step2, s2)
+
+    def test_async_fused_chain_matches_legacy(self, small_cfg):
+        """chain(scale_by_staleness, fused_apply) == the legacy fused
+        momentum through the async factory, bit-exactly."""
+        opt = momentum(0.05, 0.9, fused=True)
+        sched, s1 = self._setup(small_cfg, opt)
+        pipe = T.chain(T.scale_by_staleness(sched, 0.05), T.fused_apply(0.05, 0.9))
+        _, s2 = self._setup(small_cfg, pipe)
+        step1 = jax.jit(make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=2))
+        step2 = jax.jit(make_step(small_cfg, pipe, mode="async", num_workers=2))
+        self._compare_trajectories(small_cfg, step1, s1, step2, s2)
+        assert s2.opt_state is not None
+
+    def test_sync_chain_matches_legacy_factory(self, small_cfg):
+        from repro.training import make_train_step
+
+        opt = sgd(0.05)
+        pipe = T.chain(T.scale(-0.05))
+        s1 = init_train_state(jax.random.PRNGKey(0), small_cfg, opt)
+        s2 = init_train_state(jax.random.PRNGKey(0), small_cfg, pipe)
+        step1 = jax.jit(make_train_step(small_cfg, opt))
+        step2 = jax.jit(make_step(small_cfg, pipe, mode="sync"))
+        b1 = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        b2 = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+        for _ in range(4):
+            s1, _ = step1(s1, next(b1))
+            s2, _ = step2(s2, next(b2))
+        for x, y in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_alpha_c_resolved_from_staleness_link(self, small_cfg):
+        """make_step without alpha_c= must read it off the pipeline's
+        scale_by_staleness link (not default to 1.0)."""
+        model = Poisson(4.0)
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=8, tau_max=31)
+        pipe = T.chain(T.scale_by_staleness(sched, 0.05), T.scale(-0.05))
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, pipe, async_ring=8, adapt=adapt
+        )
+        step = jax.jit(make_step(small_cfg, pipe, mode="async", num_workers=4))
+        state, m = step(state, next(lm_batches(small_cfg.vocab_size, 2, 16, seed=0)))
+        # constant table: alpha_mean == alpha_c == the link's value
+        assert float(m["alpha_mean"]) == pytest.approx(0.05)
+
+    def test_misordered_staleness_chain_rejected(self, small_cfg):
+        """Absorbing staleness/drop moves them to the front of the update;
+        a chain that places them after a preconditioner would run a different
+        update in async vs sync mode — make_step must reject it."""
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        bad = T.chain(T.scale_by_adam(), T.scale_by_staleness(sched, 0.05),
+                      T.scale(-0.05))
+        with pytest.raises(AssertionError, match="staleness/drop links first"):
+            make_step(small_cfg, bad, mode="async", num_workers=2)
+        # sync mode runs the chain verbatim — no absorption, no restriction
+        make_step(small_cfg, bad, mode="sync")
+
+    def test_nested_chain_resolves_alpha_c(self, small_cfg):
+        """Links are found recursively: a staleness link inside a nested
+        chain must still set alpha_c (same traversal as train_loop's
+        staleness_link lookup)."""
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        model = Poisson(4.0)
+        adapt = make_adapt(sched, model, cdf_support=8, tau_max=31)
+        nested = T.chain(T.chain(T.scale_by_staleness(sched, 0.05)), T.scale(-0.05))
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, nested, async_ring=8, adapt=adapt
+        )
+        step = jax.jit(make_step(small_cfg, nested, mode="async", num_workers=4))
+        state, m = step(state, next(lm_batches(small_cfg.vocab_size, 2, 16, seed=0)))
+        # constant table: alpha_mean == the nested link's alpha_c
+        assert float(m["alpha_mean"]) == pytest.approx(0.05)
+
+    def test_drop_stale_absorbed_into_combine(self, small_cfg):
+        """A drop_stale link must zero exactly the workers whose tau exceeds
+        the threshold (on top of the ring's own live mask)."""
+        model = Poisson(4.0)
+        sched = make_schedule("constant", 0.05, tau_max=31)
+        # degenerate CDF: tau == 3 always, ring deep enough to serve it
+        adapt = init_adapt(sched.table, staleness_cdf(np.eye(8)[3]))
+        pipe_keep = T.chain(T.scale_by_staleness(sched, 0.05), T.drop_stale(3),
+                            T.scale(-0.05))
+        pipe_drop = T.chain(T.scale_by_staleness(sched, 0.05), T.drop_stale(2),
+                            T.scale(-0.05))
+        results = {}
+        for name, pipe in (("keep", pipe_keep), ("drop", pipe_drop)):
+            state = init_train_state(
+                jax.random.PRNGKey(0), small_cfg, pipe, async_ring=8, adapt=adapt
+            )
+            step = jax.jit(make_step(small_cfg, pipe, mode="async", num_workers=2))
+            batches = lm_batches(small_cfg.vocab_size, 2, 16, seed=0)
+            for _ in range(6):
+                state, m = step(state, next(batches))
+            results[name] = state
+        p0 = init_train_state(jax.random.PRNGKey(0), small_cfg, pipe_drop,
+                              async_ring=8, adapt=adapt).params
+        # tau=3 <= 3: training moved the params; tau=3 > 2: every update dropped
+        moved = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(results["keep"].params), jax.tree.leaves(p0))
+        )
+        assert moved
+        for a, b in zip(jax.tree.leaves(results["drop"].params), jax.tree.leaves(p0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLoopPipelineRefresh:
+    """train_loop(pipeline=...) drives the refresh boundary off the chain's
+    own scale_by_staleness link (satellite: no more MindTheStep leakage)."""
+
+    def test_pipeline_refresh_drains_and_refits(self, small_cfg):
+        model = Poisson(3.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
+        link = T.scale_by_staleness(sched, 0.05, m=3, tau_max=31)
+        pipe = T.chain(link, T.scale(-0.05))
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, pipe, async_ring=16, adapt=adapt
+        )
+        step = make_step(small_cfg, pipe, mode="async", num_workers=4)
+        W, n_steps, every = 4, 20, 5
+        state, _ = train_loop(
+            step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
+            num_steps=n_steps, log_every=10, pipeline=pipe, refresh_every=every,
+        )
+        assert link.estimator.n_seen == W * n_steps
+        assert int(np.asarray(state.adapt.hist).sum()) == 0
+        assert link.schedule.name.startswith("poisson_momentum")
+
+    def test_deprecated_mts_kwarg_still_works(self, small_cfg):
+        opt = sgd(0.05)
+        model = Poisson(3.0)
+        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
+        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
+        mts = mindthestep(opt, sched, 0.05, m=3, tau_max=31)
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
+        )
+        step = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=2)
+        with pytest.warns(DeprecationWarning, match="pipeline="):
+            state, _ = train_loop(
+                step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
+                num_steps=4, log_every=4, mts=mts, refresh_every=2,
+            )
+        assert mts.estimator.n_seen == 2 * 4
 
 
 class TestSyncStepThreadsAdapt:

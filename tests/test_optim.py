@@ -1,4 +1,6 @@
-"""Optimizer substrate + MindTheStep wrapper + online estimator."""
+"""Optimizer substrate + MindTheStep wrapper + online estimator + the
+chain() parity guarantees (legacy shims == their transform pipelines,
+bit-exactly)."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +11,7 @@ from repro.core import staleness as S
 from repro.core import step_size as SS
 from repro.core.estimator import OnlineStalenessEstimator
 from repro.optim import adam, mindthestep, momentum, sgd
+from repro.optim import transform as T
 from repro.optim.base import clip_by_global_norm, global_norm
 
 
@@ -101,6 +104,177 @@ class TestMindTheStep:
         # schedule keeps only the freshest gradients — the cap-limited
         # expectation is far below alpha_c.  Documented in EXPERIMENTS.md.
         assert e > 0.0
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.standard_normal((16, 4)), jnp.float32),
+        "b": {"c": jnp.asarray(rng.standard_normal(7), jnp.float32),
+              "d": jnp.asarray(rng.standard_normal(()), jnp.float32)},
+    }
+
+
+def _grads_of(params):
+    return jax.tree.map(lambda p: p * 0.1 + 0.01, params)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestChainParity:
+    """API-parity acceptance: the deprecated optimizer shims and their
+    chain() pipelines produce BIT-IDENTICAL trajectories."""
+
+    def _run_opt(self, opt, steps=6, scale=1.0):
+        p = _tree()
+        s = opt.init(p)
+        for _ in range(steps):
+            p, s = opt.update(_grads_of(p), s, p, scale=scale)
+        return p, s
+
+    def _run_pipe(self, pipe, steps=6, ctx_fn=lambda t: T.StepContext()):
+        p = _tree()
+        s = pipe.init(p)
+        for t in range(steps):
+            p, s = T.run_pipeline(pipe, _grads_of(p), s, p, ctx_fn(t))
+        return p, s
+
+    def test_sgd_equals_chain_scale(self):
+        p1, _ = self._run_opt(sgd(0.05))
+        p2, _ = self._run_pipe(T.chain(T.scale(-0.05)))
+        _assert_trees_equal(p1, p2)
+
+    def test_momentum_equals_scale_then_trace(self):
+        """The canonical momentum chain is scale(-lr) THEN trace(mu): the
+        trace state is eq. 5's velocity, so state matches bit-for-bit too."""
+        p1, v1 = self._run_opt(momentum(0.05, 0.9))
+        p2, (_, v2) = self._run_pipe(T.chain(T.scale(-0.05), T.trace(0.9)))
+        _assert_trees_equal(p1, p2)
+        _assert_trees_equal(v1, v2)
+
+    def test_adam_equals_chain(self):
+        p1, s1 = self._run_opt(adam(0.05))
+        p2, (s2, _) = self._run_pipe(T.chain(T.scale_by_adam(), T.scale(-0.05)))
+        _assert_trees_equal(p1, p2)
+        _assert_trees_equal(s1["m"], s2["m"])
+        _assert_trees_equal(s1["v"], s2["v"])
+
+    def test_fused_momentum_equals_chain_fused_apply(self):
+        p1, v1 = self._run_opt(momentum(0.05, 0.9, fused=True))
+        p2, (v2,) = self._run_pipe(T.chain(T.fused_apply(0.05, 0.9)))
+        _assert_trees_equal(p1, p2)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+    def test_runtime_scale_kwarg_parity(self):
+        p1, _ = self._run_opt(momentum(0.05, 0.9), scale=0.5)
+        p2, _ = self._run_pipe(
+            T.chain(T.scale(-0.05), T.trace(0.9)),
+            ctx_fn=lambda t: T.StepContext(scale=0.5),
+        )
+        _assert_trees_equal(p1, p2)
+
+    def test_mindthestep_equals_acceptance_chain(self):
+        """MindTheStep(momentum) == chain(scale_by_staleness, clip(big),
+        scale(-lr), trace(mu)) with ctx.tau, bit-exactly — the clip link at a
+        never-binding norm multiplies by exactly 1.0."""
+        sched = SS.make_schedule("poisson_momentum", 0.05, S.Poisson(3.0),
+                                 K=0.05, tau_max=31)
+        mts = mindthestep(momentum(0.05, 0.9), sched, alpha_c=0.05)
+        pipe = T.chain(
+            T.scale_by_staleness(sched, 0.05),
+            T.clip_by_global_norm(1e9),
+            T.scale(-0.05),
+            T.trace(0.9),
+        )
+        taus = [0, 2, 1, 5, 3, 0]
+        p1 = _tree()
+        s1 = mts.init(p1)
+        for t in taus:
+            p1, s1 = mts.update(_grads_of(p1), s1, p1, tau=t)
+        p2, _ = self._run_pipe(
+            pipe, steps=len(taus), ctx_fn=lambda t: T.StepContext(tau=taus[t])
+        )
+        _assert_trees_equal(p1, p2)
+
+    def test_optax_order_matches_to_rounding(self):
+        """trace-before-scale (the optax convention) keeps the trace in
+        gradient units: same trajectory up to float round-off, not bitwise —
+        documented in transform.py's canonical-ordering note."""
+        p1, _ = self._run_opt(momentum(0.05, 0.9), steps=10)
+        p2, _ = self._run_pipe(T.chain(T.trace(0.9), T.scale(-0.05)), steps=10)
+        for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_pipeline_attached_to_shims(self):
+        for opt in (sgd(0.1), momentum(0.1, 0.9), momentum(0.1, 0.9, fused=True),
+                    adam(0.1)):
+            assert opt.pipeline is not None
+            assert isinstance(opt.pipeline, T.Chain)
+
+
+class TestTransformLinks:
+    def test_clip_link_caps_update_norm(self):
+        link = T.clip_by_global_norm(1.0)
+        u = {"a": jnp.ones((3,)) * 2.0, "b": jnp.ones((4,)) * 2.0}
+        out, _ = link.update(u, (), None, T.StepContext())
+        assert float(global_norm(out)) == pytest.approx(1.0, rel=1e-5)
+        # never-binding clip is an exact no-op (factor == 1.0)
+        x = jnp.asarray([0.1])
+        out2, _ = link.update({"a": x}, (), None, T.StepContext())
+        np.testing.assert_array_equal(np.asarray(out2["a"]), np.asarray(x))
+
+    def test_drop_stale_zeroes_beyond_threshold(self):
+        link = T.drop_stale(4)
+        u = {"w": jnp.ones((3,))}
+        kept, _ = link.update(u, (), None, T.StepContext(tau=4))
+        dropped, _ = link.update(u, (), None, T.StepContext(tau=5))
+        np.testing.assert_array_equal(np.asarray(kept["w"]), 1.0)
+        np.testing.assert_array_equal(np.asarray(dropped["w"]), 0.0)
+
+    def test_staleness_and_drop_identity_when_absorbed(self):
+        """ctx.staleness_applied marks the async engines' combine-absorbed
+        path: both links must pass updates through untouched."""
+        sched = SS.constant(0.1, tau_max=8)
+        u = {"w": jnp.asarray([3.0])}
+        ctx = T.StepContext(tau=7, staleness_applied=True)
+        for link in (T.scale_by_staleness(sched, 0.1), T.drop_stale(2)):
+            out, _ = link.update(u, (), None, ctx)
+            np.testing.assert_array_equal(np.asarray(out["w"]), [3.0])
+
+    def test_staleness_link_prefers_jit_resident_table(self):
+        """With ctx.adapt present the gather must read adapt.alpha_table (the
+        refresh-without-retrace seam), not the static schedule."""
+        from repro.training import init_adapt
+
+        sched = SS.constant(0.1, tau_max=8)
+        adapt = init_adapt(np.full(9, 0.2), np.linspace(0.1, 1.0, 8))
+        link = T.scale_by_staleness(sched, 0.1)
+        u = {"w": jnp.asarray([1.0])}
+        out, _ = link.update(u, (), None, T.StepContext(tau=0, adapt=adapt))
+        np.testing.assert_allclose(np.asarray(out["w"]), [2.0])  # 0.2 / 0.1
+
+    def test_chain_rejects_nonterminal_fused_apply(self):
+        with pytest.raises(AssertionError, match="terminal"):
+            T.chain(T.fused_apply(0.1, 0.9), T.scale(-0.1))
+
+    def test_chain_rejects_mismatched_state(self):
+        pipe = T.chain(T.scale(-0.1), T.trace(0.9))
+        with pytest.raises(AssertionError, match="chain state"):
+            pipe.update({"w": jnp.ones(2)}, ((),), {"w": jnp.ones(2)},
+                        T.StepContext())
+
+    def test_staleness_link_duck_types_refresh(self):
+        """The link carries the online hooks host_refresh drives (the seam
+        train_loop(pipeline=) uses)."""
+        link = T.scale_by_staleness(SS.constant(0.01), 0.01, m=8)
+        link.observe(np.random.default_rng(0).poisson(8.0, size=5000))
+        link.refresh()
+        assert link.schedule.name.startswith("poisson_momentum")
+        assert T.staleness_link(T.chain(link, T.scale(-0.01))) is link
 
 
 class TestEstimator:
