@@ -14,6 +14,10 @@ Rows are matched by ``name`` AND ``config`` hash — a configuration change
 makes the comparison meaningless, so it is reported as a skip (re-bless the
 baseline, see README "Scenario matrix & benchmark gating").  Exit is nonzero
 on any regression or missing file/row.
+
+``--report-only`` prints the full comparison but always exits 0 — the
+scheduled nightly workflow uses it to surface drift on the long (non-smoke)
+matrix without turning hardware-variance into red runs.
 """
 
 from __future__ import annotations
@@ -78,6 +82,11 @@ def main(argv=None) -> None:
         default=0.25,
         help="default relative tolerance band (meta.tol overrides per row)",
     )
+    ap.add_argument(
+        "--report-only",
+        action="store_true",
+        help="print the comparison but never fail (nightly drift report)",
+    )
     args = ap.parse_args(argv)
 
     baseline_files = sorted(glob.glob(os.path.join(args.baselines, "BENCH_*.json")))
@@ -103,7 +112,11 @@ def main(argv=None) -> None:
         all_failures.extend(f"{fname}: {f}" for f in failures)
 
     if all_failures:
-        raise SystemExit("bench-gate: regressions detected:\n  " + "\n  ".join(all_failures))
+        report = "bench-gate: regressions detected:\n  " + "\n  ".join(all_failures)
+        if args.report_only:
+            print(f"\n[report-only] {report}")
+            return
+        raise SystemExit(report)
     print("\nbench-gate: all gated benchmarks within tolerance")
 
 

@@ -30,7 +30,10 @@ __all__ = [
     "DelayedGradients",
     "WorkerRing",
     "init_delayed",
+    "init_flat_delayed",
     "init_worker_ring",
+    "init_flat_worker_ring",
+    "flat_size",
     "sample_tau",
     "delayed_apply",
     "delayed_apply_batch",
@@ -55,6 +58,27 @@ class DelayedGradients:
 
 def init_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradients:
     ring = jax.tree.map(lambda p: jnp.zeros((K,) + p.shape, dtype), params)
+    return DelayedGradients(ring=ring, step=jnp.zeros((), jnp.int32))
+
+
+def flat_size(params: Any) -> int:
+    """Total element count of a pytree — the ``N`` of its packed flat buffer."""
+    return sum(int(np.prod(p.shape)) if p.shape else 1 for p in jax.tree.leaves(params))
+
+
+def init_flat_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradients:
+    """Flat-RESIDENT ring: ONE ``(K, N)`` buffer for the whole gradient pytree.
+
+    The fused execution path (``make_step(..., fuse=True)``) keeps gradients
+    packed: the per-step push/pop/combine runs over this single buffer — one
+    dynamic-slice and one contraction per step instead of one per leaf — and
+    the pack happens exactly once per step (the fresh gradient), never when
+    refreshing ring slots.  Every ring op (``delayed_combine`` etc.) is pytree-
+    polymorphic, so the flat ring is just the single-leaf special case of the
+    same code path — which is what makes the fused/unfused bit-parity hold:
+    identical pushes, gathers and contractions, merely de-fragmented.
+    """
+    ring = jnp.zeros((K, flat_size(params)), dtype)
     return DelayedGradients(ring=ring, step=jnp.zeros((), jnp.int32))
 
 
@@ -149,6 +173,18 @@ class WorkerRing:
 
 def init_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> WorkerRing:
     ring = jax.tree.map(lambda p: jnp.zeros((W, K) + p.shape, dtype), params)
+    return WorkerRing(ring=ring, step=jnp.zeros((), jnp.int32))
+
+
+def init_flat_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> WorkerRing:
+    """Per-worker rings as ONE ``(W, K, N)`` buffer (see :func:`init_flat_delayed`).
+
+    The leading worker axis shards over the ``workers`` mesh axis exactly like
+    the pytree form (``worker_specs`` keys on axis 0 regardless of leaf
+    count); ``worker_ring_combine`` treats the bare array as a single-leaf
+    pytree, so the sharded fused step reuses the proven combine unchanged.
+    """
+    ring = jnp.zeros((W, K, flat_size(params)), dtype)
     return WorkerRing(ring=ring, step=jnp.zeros((), jnp.int32))
 
 

@@ -82,8 +82,15 @@ class StepSizeSchedule:
     @functools.cached_property
     def device_table(self) -> jax.Array:
         """The f32 table on device, uploaded ONCE per schedule (the schedule
-        is frozen, so the cache can never go stale)."""
-        return jnp.asarray(self.table, dtype=jnp.float32)
+        is frozen, so the cache can never go stale).
+
+        Materialized OUTSIDE any ambient trace: the first touch often happens
+        inside a jitted step (``schedule(tau)`` with a traced tau), and
+        caching the staged constant would leak that trace's tracer into every
+        later compilation of the same schedule.
+        """
+        with jax.ensure_compile_time_eval():
+            return jnp.asarray(self.table, dtype=jnp.float32)
 
     def __call__(self, tau):
         """Jit-friendly gather: ``tau`` may be a traced integer array."""

@@ -1,3 +1,14 @@
-from repro.kernels.adaptive_update.ops import adaptive_update, adaptive_update_tree
+from repro.kernels.adaptive_update.fused import fused_chain_call, fused_chain_flat
+from repro.kernels.adaptive_update.ops import (
+    adaptive_update,
+    adaptive_update_flat,
+    adaptive_update_tree,
+)
 
-__all__ = ["adaptive_update", "adaptive_update_tree"]
+__all__ = [
+    "adaptive_update",
+    "adaptive_update_flat",
+    "adaptive_update_tree",
+    "fused_chain_call",
+    "fused_chain_flat",
+]

@@ -1,0 +1,191 @@
+"""Fused-chain Pallas TPU kernels: one flat-buffer pass per optimizer family.
+
+The fusion compiler (:mod:`repro.optim.fuse`) lowers a whole ``chain()``
+pipeline to ONE kernel launch per step.  Three kernels cover the supported
+bodies — ``sgd`` (scale + apply), ``momentum`` (scale + trace + apply) and
+``adam`` (preconditioner + scale + apply) — and the staleness / drop / clip
+links enter as SCALAR factors (``f_stale``/``f_keep``/``f_clip``), so the
+"± clip" variants reuse the same kernels: the norm reduction happens outside
+(it is a second data pass by nature) and only its scalar result is fused in.
+
+Every (BLOCK_ROWS, LANES) VMEM tile of ``p``/``g``/state is read once and
+written once — the whole server update is a single HBM pass no matter how
+many links the chain has, vs one read+write pass PER LINK for the link-by-link
+``tree.map`` execution.  Scalars ride as (1, 1) SMEM-friendly tiles exactly
+like the original ``adaptive_update`` kernel, so one compiled kernel serves
+every staleness value / clip factor / bias-correction step.
+
+Scalar factors are applied sequentially in link order (never pre-multiplied):
+float multiplication is not associative, and bit-equality with the unfused
+pipeline is the contract (`f = 1.0` for an absent link is bitwise exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adaptive_update.kernel import BLOCK_ROWS, LANES
+from repro.kernels.adaptive_update.ref import fused_chain_ref
+
+__all__ = ["fused_chain_call", "fused_chain_flat", "SCALAR_ORDER"]
+
+_TILE = BLOCK_ROWS * LANES
+
+# Scalar bundle keys per family, in kernel-operand order.
+SCALAR_ORDER = {
+    "sgd": ("f_stale", "f_keep", "f_clip", "m_scale"),
+    "momentum": ("f_stale", "f_keep", "f_clip", "m_scale", "mu"),
+    "adam": (
+        "f_stale",
+        "f_keep",
+        "f_clip",
+        "m_scale",
+        "b1",
+        "omb1",
+        "b2",
+        "omb2",
+        "eps",
+        "c1",
+        "c2",
+    ),
+}
+
+
+def _prefix(u, fs_ref, fk_ref, fc_ref):
+    """staleness -> drop -> clip scalar factors, in link order."""
+    u = fs_ref[0, 0] * u
+    u = u * fk_ref[0, 0]
+    return u * fc_ref[0, 0]
+
+
+def _sgd_kernel(fs_ref, fk_ref, fc_ref, ms_ref, p_ref, g_ref, p_out_ref):
+    u = _prefix(g_ref[...].astype(jnp.float32), fs_ref, fk_ref, fc_ref)
+    u = ms_ref[0, 0] * u
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + u).astype(p_out_ref.dtype)
+
+
+def _momentum_kernel(
+    fs_ref, fk_ref, fc_ref, ms_ref, mu_ref, p_ref, g_ref, v_ref, p_out_ref, v_out_ref
+):
+    u = _prefix(g_ref[...].astype(jnp.float32), fs_ref, fk_ref, fc_ref)
+    u = ms_ref[0, 0] * u
+    v_new = mu_ref[0, 0] * v_ref[...].astype(jnp.float32) + u
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + v_new).astype(p_out_ref.dtype)
+
+
+def _adam_kernel(
+    fs_ref,
+    fk_ref,
+    fc_ref,
+    ms_ref,
+    b1_ref,
+    omb1_ref,
+    b2_ref,
+    omb2_ref,
+    eps_ref,
+    c1_ref,
+    c2_ref,
+    p_ref,
+    g_ref,
+    m_ref,
+    v_ref,
+    p_out_ref,
+    m_out_ref,
+    v_out_ref,
+):
+    u = _prefix(g_ref[...].astype(jnp.float32), fs_ref, fk_ref, fc_ref)
+    m_new = b1_ref[0, 0] * m_ref[...].astype(jnp.float32) + omb1_ref[0, 0] * u
+    v_new = b2_ref[0, 0] * v_ref[...].astype(jnp.float32) + omb2_ref[0, 0] * jnp.square(u)
+    out = (m_new * c1_ref[0, 0]) / (jnp.sqrt(v_new * c2_ref[0, 0]) + eps_ref[0, 0])
+    u2 = ms_ref[0, 0] * out
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + u2).astype(p_out_ref.dtype)
+
+
+_KERNELS = {
+    # kind -> (kernel body, number of flat state buffers)
+    "sgd": (_sgd_kernel, 0),
+    "momentum": (_momentum_kernel, 1),
+    "adam": (_adam_kernel, 2),
+}
+
+
+def _to_tiles(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def fused_chain_call(kind: str, p, g, bufs, scalars, *, interpret: bool = True):
+    """One Pallas launch for a fused chain step on flat 1-D buffers.
+
+    ``bufs`` is the family's flat state tuple (see ``_KERNELS``), ``scalars``
+    the f32 scalar bundle keyed per ``SCALAR_ORDER[kind]``.  Returns
+    ``(p_new, new_bufs)`` with the same flat shapes.
+    """
+    kernel, n_bufs = _KERNELS[kind]
+    bufs = tuple(bufs)
+    assert len(bufs) == n_bufs, f"{kind} expects {n_bufs} state buffers, got {len(bufs)}"
+    p2d, n = _to_tiles(p)
+    g2d, _ = _to_tiles(g.astype(jnp.float32))
+    buf2d = [_to_tiles(b)[0] for b in bufs]
+    R = p2d.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    svals = [jnp.asarray(scalars[k], jnp.float32).reshape(1, 1) for k in SCALAR_ORDER[kind]]
+    out2d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scalar_spec] * len(svals) + [tile] * (2 + n_bufs),
+        out_specs=[tile] * (1 + n_bufs),
+        out_shape=[jax.ShapeDtypeStruct(p2d.shape, p2d.dtype)]
+        + [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in buf2d],
+        interpret=interpret,
+    )(*svals, p2d, g2d, *buf2d)
+    p_new = out2d[0].reshape(-1)[:n].reshape(p.shape)
+    new_bufs = tuple(o.reshape(-1)[:n].reshape(b.shape) for o, b in zip(out2d[1:], bufs))
+    return p_new, new_bufs
+
+
+def fused_chain_flat(
+    kind: str,
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    bufs,
+    scalars,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Production dispatch for one fused chain step on flat 1-D buffers.
+
+    ``use_pallas=None`` auto-selects the Pallas kernel on TPU (interpret OFF —
+    one real HBM pass) and the XLA reference elsewhere; both lower to the same
+    one-pass data movement and identical f32 numerics
+    (:func:`~repro.kernels.adaptive_update.ref.fused_chain_ref` is the oracle).
+    ``bufs``/return mirror :func:`fused_chain_call` except that the ref path
+    keeps adam's state as the ``{"m", "v"}`` dict it receives.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        if kind == "adam":
+            p_new, (m_new, v_new) = fused_chain_call(
+                kind, p, g, (bufs["m"], bufs["v"]), scalars, interpret=interpret
+            )
+            return p_new, {"m": m_new, "v": v_new}
+        kernel_bufs = () if kind == "sgd" else (bufs,)
+        p_new, new_bufs = fused_chain_call(kind, p, g, kernel_bufs, scalars, interpret=interpret)
+        return p_new, (bufs if kind == "sgd" else new_bufs[0])
+    return fused_chain_ref(kind, p, g, bufs, scalars)

@@ -87,7 +87,9 @@ def _flash_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "t_real", "interpret"),
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "block_q", "block_k", "t_real", "interpret"
+    ),
 )
 def flash_attention_call(
     q: jnp.ndarray,  # (B, Nq, Sp, H)  Sp % block_q == 0

@@ -32,7 +32,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.data import lm_batches
@@ -59,6 +58,10 @@ def main():
     ap.add_argument("--refresh_every", type=int, default=0, help="online refit cadence")
     ap.add_argument("--fused", action="store_true",
                     help="fused flat-buffer momentum apply (Pallas on TPU)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="lower the WHOLE pipeline to one Pallas flat-buffer "
+                         "kernel per step (repro.optim.fuse; flat-resident "
+                         "delayed rings in async mode)")
     ap.add_argument("--momentum", type=float, default=None,
                     help="heavy-ball mu (adds the trace link; defaults to 0.9 "
                          "when --fused is set; 0.0 is honored)")
@@ -86,18 +89,22 @@ def main():
         # refreshed table always fills the jit-resident one.
         link = T.scale_by_staleness(sched, args.lr, m=args.workers, tau_max=adapt.tau_max)
         pipeline = T.chain(link, *base_links)
-        step = make_step(cfg, pipeline, mode="async", num_workers=args.workers)
+        step = make_step(
+            cfg, pipeline, mode="async", num_workers=args.workers, fuse=args.fuse
+        )
     else:
         pipeline = T.chain(*base_links)
-        step = make_step(cfg, pipeline, mode="sync")
+        step = make_step(cfg, pipeline, mode="sync", fuse=args.fuse)
 
     state = init_train_state(
         jax.random.PRNGKey(args.seed), cfg, pipeline,
-        async_ring=args.ring if args.async_psgd else 0, adapt=adapt,
+        async_ring=args.ring if args.async_psgd else 0, adapt=adapt, fuse=args.fuse,
     )
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
+    from repro.async_engine.delayed import flat_size
+
+    n_params = flat_size(state.params)
     print(f"arch={cfg.name} params={n_params / 1e6:.1f}M async={args.async_psgd} "
-          f"fused={args.fused}")
+          f"fused={args.fused} fuse={args.fuse}")
 
     batches = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
     state, history = train_loop(

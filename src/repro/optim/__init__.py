@@ -1,4 +1,5 @@
 from repro.optim import transform
+from repro.optim.fuse import FusionPlan, fuse_pipeline, plan_fusion
 from repro.optim.base import (
     Optimizer,
     adam,
@@ -31,6 +32,9 @@ __all__ = [
     # form lives at transform.clip_by_global_norm — the top-level name keeps
     # the legacy eager function)
     "transform",
+    "FusionPlan",
+    "fuse_pipeline",
+    "plan_fusion",
     "Chain",
     "GradientTransform",
     "StepContext",

@@ -1,0 +1,268 @@
+"""Pipeline fusion compiler: lower a ``chain()`` to ONE flat-buffer kernel.
+
+The paper's practical requirement (§VI) is that staleness adaptation must be
+cheap relative to the apply; Keuper & Pfreundt (1505.04956) make the same
+point that the per-update numeric core dominates AsyncPSGD throughput.  PR 3
+made the server update a composable pipeline, but each link still executes as
+its own pass over the parameter pytree (one read + one write per link per
+leaf).  This module turns the pipeline ABSTRACTION into an execution model:
+
+* :func:`plan_fusion` walks a chain and classifies every link —
+
+  =====================  ====================================================
+  link class             lowering
+  =====================  ====================================================
+  ``scale_by_staleness`` scalar factor ``alpha(tau)/alpha_c`` (absorbed into
+  / ``drop_stale``       the delayed-ring combine weights in the async
+                         engines; gathered per-step in sync mode)
+  ``clip_by_global_norm`` norm reduction outside the kernel (a second data
+                         pass by nature), its scalar factor fused in
+  ``scale`` / ``trace``  elementwise body — selects the ``sgd`` / ``momentum``
+  / ``scale_by_adam``    / ``adam`` kernel family member at trace time
+  ``fused_apply``        already-terminal momentum body (same plan)
+  anything else          NOT fuseable -> ``plan_fusion`` returns None and the
+                         caller falls back to link-by-link execution
+  =====================  ====================================================
+
+* :func:`fuse_pipeline` emits the fused pipeline: a terminal
+  :class:`~repro.optim.transform.Chain` whose ``update`` runs the whole step
+  as one :func:`~repro.kernels.adaptive_update.fused.fused_chain_flat` launch
+  over packed ``(N,)`` buffers.  It keeps the ORIGINAL links in ``.links``,
+  so every introspection seam (``staleness_link`` for the host refresh,
+  ``drop_link`` / ``alpha_c`` resolution and the absorbable-order guard in
+  ``make_step``) sees through the fusion transparently.
+
+Correctness contract: in f32 the fused step is BIT-IDENTICAL to the unfused
+pipeline for the sgd / momentum / adam bodies in every engine mode (scalar
+factors are applied sequentially in link order; the flat pack is a pure
+element permutation).  The one documented exception is the clip variant,
+whose global-norm reduction runs over the flat buffer instead of leaf-wise —
+same values to f32 round-off, not bitwise (asserted at 1e-6 in the parity
+suite).  ``make_step(..., fuse=True)`` / ``init_train_state(..., fuse=True)``
+wire this in for sync, async and sharded_async.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.async_engine.delayed import flat_size
+from repro.optim import transform as T
+
+__all__ = ["FusionPlan", "plan_fusion", "fuse_pipeline", "flat_chain_step"]
+
+# Link kinds the async engines absorb into the combine weights / the sync
+# mode folds into the per-step scalar prefix.
+_PREFIX_KINDS = ("staleness", "drop")
+# Chain bodies -> kernel family member.
+_BODIES = {
+    ("scale",): "sgd",
+    ("scale", "trace"): "momentum",
+    ("fused_apply",): "momentum",
+    ("adam", "scale"): "adam",
+}
+
+
+@dataclasses.dataclass(eq=False)
+class FusionPlan:
+    """Static lowering decision for one chain (everything trace-time)."""
+
+    kind: str  # kernel family member: "sgd" | "momentum" | "adam"
+    scale: float  # signed base step (the scale link's factor, e.g. -lr)
+    mu: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip: float | None = None
+    staleness: T.StalenessTransform | None = None
+    drop: T.GradientTransform | None = None  # drop_stale link (carries tau_drop)
+
+
+def plan_fusion(pipeline) -> FusionPlan | None:
+    """Classify a pipeline's links; None when any link resists fusion."""
+    if not isinstance(pipeline, T.GradientTransform):
+        return None
+    links = [link for link in T.iter_links(pipeline) if link.kind != "identity"]
+    staleness = drop = None
+    i = 0
+    while i < len(links) and links[i].kind in _PREFIX_KINDS:
+        link = links[i]
+        if link.kind == "staleness":
+            if staleness is not None:
+                return None  # two staleness links stack factors; keep it simple
+            staleness = link
+        else:
+            if drop is not None:
+                return None
+            drop = link
+        i += 1
+    clip = None
+    if i < len(links) and links[i].kind == "clip":
+        clip = float(links[i].max_norm)
+        i += 1
+    body = links[i:]
+    kind = _BODIES.get(tuple(link.kind for link in body))
+    if kind is None:
+        return None
+    plan = FusionPlan(kind=kind, scale=0.0, clip=clip, staleness=staleness, drop=drop)
+    if body[0].kind == "fused_apply":
+        plan.scale, plan.mu = -body[0].lr, body[0].mu
+    elif kind == "adam":
+        adam, sc = body
+        plan.scale = sc.factor
+        plan.b1, plan.b2, plan.eps = adam.b1, adam.b2, adam.eps
+    else:
+        plan.scale = body[0].factor
+        if kind == "momentum":
+            plan.mu = body[1].mu
+    return plan
+
+
+def _prefix_scalars(plan: FusionPlan, ctx: T.StepContext):
+    """The staleness/drop scalar factors for one step (1.0 when absorbed or
+    absent — multiplication by 1.0 is bitwise exact), mirroring the links'
+    own gathers so a host refresh stays coherent through ``plan.staleness``."""
+    one = jnp.float32(1.0)
+    f_stale, f_keep = one, one
+    if not ctx.staleness_applied:
+        tau = 0 if ctx.tau is None else ctx.tau
+        if plan.staleness is not None:
+            link = plan.staleness
+            if ctx.adapt is not None:
+                table = ctx.adapt.alpha_table
+                alpha = table[jnp.clip(tau, 0, table.shape[0] - 1)]
+            else:
+                assert link.schedule is not None, (
+                    "fused scale_by_staleness without a schedule needs ctx.adapt "
+                    "(the jit-resident alpha table)"
+                )
+                alpha = link.schedule(tau)
+            f_stale = alpha / jnp.float32(link.alpha_c)
+        if plan.drop is not None:
+            f_keep = (jnp.asarray(tau) <= plan.drop.tau_drop).astype(jnp.float32)
+    return f_stale, f_keep
+
+
+def flat_chain_step(plan: FusionPlan, g_flat, bufs, p_flat, ctx=None):
+    """The flat-resident fused step: ``(new_p_flat, new_bufs)`` in ONE launch.
+
+    This is the kernel-level entry the fused pipeline (and the benchmark's
+    flat-resident rows) run — no pytree pack/unpack.  ``bufs`` is the fused
+    state (``()`` / velocity / ``{"m","v","t"}``); the clip norm, when
+    present, is the one extra (unavoidable) data pass, reduced over the flat
+    buffer.
+    """
+    from repro.kernels.adaptive_update.fused import fused_chain_flat
+
+    ctx = T.StepContext() if ctx is None else ctx
+    g_flat = g_flat.astype(jnp.float32)
+    f_stale, f_keep = _prefix_scalars(plan, ctx)
+    f_clip = jnp.float32(1.0)
+    if plan.clip is not None:
+        pre = (f_stale * g_flat) * f_keep
+        norm = jnp.sqrt(jnp.sum(jnp.square(pre)))
+        f_clip = jnp.minimum(1.0, plan.clip / jnp.maximum(norm, 1e-9))
+    scalars = {
+        "f_stale": f_stale,
+        "f_keep": f_keep,
+        "f_clip": f_clip,
+        "m_scale": jnp.float32(plan.scale) * ctx.scale,
+    }
+    if plan.kind == "momentum":
+        scalars["mu"] = jnp.float32(plan.mu)
+        p_new, v_new = fused_chain_flat(plan.kind, p_flat, g_flat, bufs, scalars)
+        return p_new, v_new
+    if plan.kind == "adam":
+        t = bufs["t"] + 1
+        tf = t.astype(jnp.float32)
+        scalars.update(
+            b1=jnp.float32(plan.b1),
+            omb1=jnp.float32(1.0 - plan.b1),
+            b2=jnp.float32(plan.b2),
+            omb2=jnp.float32(1.0 - plan.b2),
+            eps=jnp.float32(plan.eps),
+            # same expressions as the scale_by_adam link, so the bias
+            # corrections match it bitwise
+            c1=1.0 / (1.0 - plan.b1**tf),
+            c2=1.0 / (1.0 - plan.b2**tf),
+        )
+        p_new, mv = fused_chain_flat(
+            plan.kind, p_flat, g_flat, {"m": bufs["m"], "v": bufs["v"]}, scalars
+        )
+        return p_new, {"m": mv["m"], "v": mv["v"], "t": t}
+    p_new, _ = fused_chain_flat(plan.kind, p_flat, g_flat, (), scalars)
+    return p_new, bufs
+
+
+def fuse_pipeline(pipeline) -> T.Chain | None:
+    """Lower a fuseable chain to its one-kernel execution form (else None).
+
+    The result is a terminal :class:`~repro.optim.transform.Chain`
+    (``applies_params=True``, ``kind="fused_chain"``) that keeps the original
+    links in ``.links`` for introspection — ``staleness_link`` /
+    ``drop_link`` / ``alpha_c`` resolution and ``train_loop``'s refresh
+    boundary all see the same links as the unfused pipeline.  Its state is
+    ``{"p", "bufs"}``, all flat-resident: ``bufs`` is the kernel family's
+    state (``()`` for sgd, one f32 velocity buffer for momentum,
+    ``{"m", "v", "t"}`` flat moments for adam) and ``p`` is the FLAT-RESIDENT
+    parameter buffer — for all-f32 params it is packed ONCE here at init and
+    thereafter only written by the kernel, so the per-step tree traffic drops
+    to one gradient pack (skipped too when the caller hands over a flat
+    ``g_eff``, as the fused async engines do) and the one unavoidable unpack
+    that derives the model's pytree view.  Params in any other dtype fall
+    back to a per-step pack (``p = None``): the unfused pipeline re-reads the
+    down-cast params each step, and a full-precision resident copy — while
+    numerically nicer — would break the bit-parity contract.
+
+    Coherence caveat: with ``p`` resident, replacing ``TrainState.params``
+    by hand (instead of through the step) requires re-initializing the
+    optimizer state, exactly like any optimizer whose state mirrors params.
+    """
+    plan = plan_fusion(pipeline)
+    if plan is None:
+        return None
+
+    def _family_bufs(n):
+        if plan.kind == "momentum":
+            return jnp.zeros((n,), jnp.float32)
+        if plan.kind == "adam":
+            return {
+                "m": jnp.zeros((n,), jnp.float32),
+                "v": jnp.zeros((n,), jnp.float32),
+                "t": jnp.zeros((), jnp.int32),
+            }
+        return ()
+
+    def init(params):
+        all_f32 = all(l.dtype == jnp.float32 for l in jax.tree.leaves(params))
+        return {
+            "p": T.pack_flat(params) if all_f32 else None,
+            "bufs": _family_bufs(flat_size(params)),
+        }
+
+    def update(u, state, params, ctx=None):
+        assert isinstance(state, dict) and set(state) == {"p", "bufs"}, (
+            "fused pipeline got a non-fused opt state — initialize it with the "
+            "same fuse=True flag (init_train_state / init_sharded_async_state)"
+        )
+        if isinstance(u, jax.Array) and u.ndim == 1:
+            g_flat = u
+        else:
+            g_flat = T.pack_flat(u)
+        p_flat = state["p"] if state["p"] is not None else T.pack_flat(params)
+        p_new, bufs = flat_chain_step(plan, g_flat, state["bufs"], p_flat, ctx)
+        new_state = {"p": p_new if state["p"] is not None else None, "bufs": bufs}
+        return T.unpack_flat(p_new, params), new_state
+
+    fused = T.Chain(
+        init=init,
+        update=update,
+        applies_params=True,
+        kind="fused_chain",
+        links=tuple(T.iter_links(pipeline)),
+    )
+    fused.plan = plan
+    return fused

@@ -62,6 +62,11 @@ bit-exact shim over it.  The optax-style ordering ``chain(trace(mu),
 scale(-lr))`` keeps the trace in gradient units and matches only to float
 round-off (the recursions are scalar multiples of each other).
 
+Execution: by default a chain runs link-by-link (one pass over the update
+pytree per link).  The fusion compiler (:mod:`repro.optim.fuse`, reached via
+``make_step(..., fuse=True)``) lowers recognizable chains to ONE Pallas
+flat-buffer kernel per step with bit-identical (f32) trajectories.
+
 Async/sharded absorption: when a pipeline runs inside the async engines, the
 per-worker ``alpha(tau_w)`` weighting must happen *inside* the delayed-ring
 combine (each worker's gradient is weighted before the sum) — so the step
@@ -186,9 +191,11 @@ def chain(*links: GradientTransform) -> Chain:
 
     def update(updates, state, params, ctx=None):
         ctx = StepContext() if ctx is None else ctx
-        assert len(state) == len(links), (
-            f"chain state has {len(state)} entries for {len(links)} links — "
-            "initialize the optimizer state with this pipeline's init()"
+        assert isinstance(state, tuple) and len(state) == len(links), (
+            f"chain state is {type(state).__name__} with {len(state)} entries "
+            f"for {len(links)} links — initialize the optimizer state with "
+            "this pipeline's init() (a dict here usually means a fused state "
+            "fed to an unfused step: match the fuse= flags)"
         )
         new_states = []
         for link, s in zip(links, state):
@@ -304,7 +311,9 @@ def trace(mu: float) -> GradientTransform:
         v2 = jax.tree.map(lambda v_, u_: mu * v_ + u_.astype(jnp.float32), v, u)
         return v2, v2
 
-    return GradientTransform(init=init, update=update, kind="trace")
+    t = GradientTransform(init=init, update=update, kind="trace")
+    t.mu = mu  # introspected by the fusion pass (repro.optim.fuse)
+    return t
 
 
 def clip_by_global_norm(max_norm: float) -> GradientTransform:
@@ -466,7 +475,9 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Grad
         )
         return out, {"m": m, "v": v, "t": t}
 
-    return GradientTransform(init=init, update=update, kind="adam")
+    t = GradientTransform(init=init, update=update, kind="adam")
+    t.b1, t.b2, t.eps = float(b1), float(b2), float(eps)
+    return t
 
 
 # ---------------------------------------------------------------------------
@@ -489,8 +500,9 @@ def fused_apply(lr: float, mu: float = 0.0) -> GradientTransform:
     lr, mu = float(lr), float(mu)
 
     def init(params):
-        n = sum(int(np.prod(l.shape)) if l.shape else 1 for l in jax.tree.leaves(params))
-        return jnp.zeros((n,), jnp.float32)
+        from repro.async_engine.delayed import flat_size
+
+        return jnp.zeros((flat_size(params),), jnp.float32)
 
     def update(u, v_flat, params, ctx):
         from repro.kernels.adaptive_update.ops import adaptive_update_flat
@@ -504,9 +516,11 @@ def fused_apply(lr: float, mu: float = 0.0) -> GradientTransform:
         p_new, v_new = adaptive_update_flat(p_flat, g_flat, v_flat, alpha, jnp.float32(mu))
         return unpack_flat(p_new, params), v_new
 
-    return GradientTransform(
+    t = GradientTransform(
         init=init, update=update, applies_params=True, kind="fused_apply"
     )
+    t.lr, t.mu = lr, mu
+    return t
 
 
 # ---------------------------------------------------------------------------

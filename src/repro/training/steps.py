@@ -28,6 +28,13 @@ factories (``make_train_step`` / ``make_async_train_step`` /
 pipelines and legacy :class:`~repro.optim.base.Optimizer` shims —
 trajectories are bit-identical either way.
 
+``fuse=True`` switches every mode to the FUSED execution model
+(:mod:`repro.optim.fuse`): the whole pipeline lowers to one Pallas
+flat-buffer kernel per step, the delayed rings live flat-resident (one
+``(K, N)`` / ``(W, K, N)`` buffer instead of one ring per leaf), and the
+trajectory stays bit-identical (f32) to the link-by-link execution.
+Unfuseable chains fall back with a single warning.
+
 ``make_serve_step`` — one decode step against a KV cache (inference shapes
 ``decode_32k`` / ``long_500k``).
 
@@ -38,6 +45,7 @@ in/out shardings supplied by the launcher.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -48,6 +56,8 @@ from repro.async_engine.delayed import (
     WorkerRing,
     delayed_combine,
     init_delayed,
+    init_flat_delayed,
+    init_flat_worker_ring,
     init_worker_ring,
     worker_ring_combine,
 )
@@ -97,10 +107,18 @@ def init_train_state(
     async_ring: int = 0,
     adapt: AdaptState | None = None,
     params: Any | None = None,
+    fuse: bool = False,
 ) -> TrainState:
     """``opt`` is either a legacy :class:`Optimizer` or a pipeline
     (:class:`~repro.optim.transform.GradientTransform`) — both expose
-    ``init(params) -> opt_state``."""
+    ``init(params) -> opt_state``.
+
+    ``fuse=True`` initializes the FUSED execution layout for a fuseable
+    pipeline (pair it with ``make_step(..., fuse=True)``): flat-resident
+    optimizer state and a flat ``(K, N)`` delayed ring.  An unfuseable
+    pipeline falls back to the standard layout silently — ``make_step`` owns
+    the (single) fallback warning.
+    """
     kp, kr = jax.random.split(key)
     if params is None:
         params = M.init_model(kp, cfg)
@@ -113,14 +131,32 @@ def init_train_state(
         params = jax.tree.map(
             lambda p: p.astype(pd) if p.dtype == jnp.float32 else p, params
         )
+    fused = _fused_form(opt) if fuse else None
+    init_ring = init_flat_delayed if fused is not None else init_delayed
     return TrainState(
         params=params,
-        opt_state=opt.init(params),
+        opt_state=(fused or opt).init(params),
         step=jnp.zeros((), jnp.int32),
         rng=kr,
-        delayed=init_delayed(params, async_ring) if async_ring else None,
+        delayed=init_ring(params, async_ring) if async_ring else None,
         adapt=adapt,
     )
+
+
+def _fused_form(pipeline):
+    """The one-kernel lowering of ``pipeline`` (None when not fuseable).
+
+    Accepts anything ``make_step`` accepts: a chain, or a legacy shim whose
+    ``.pipeline`` carries the chain.
+    """
+    from repro.optim.fuse import fuse_pipeline
+
+    transform = (
+        pipeline
+        if isinstance(pipeline, T.GradientTransform)
+        else getattr(pipeline, "pipeline", None)
+    )
+    return fuse_pipeline(transform) if transform is not None else None
 
 
 def _constrain_grads(grads, cfg):
@@ -217,6 +253,7 @@ def make_step(
     num_workers: int = 1,
     mesh=None,
     axis_name: str = "workers",
+    fuse: bool = False,
 ) -> Callable:
     """One step builder for every engine: ``(TrainState, batch) -> (TrainState, metrics)``.
 
@@ -227,9 +264,29 @@ def make_step(
     ``mode="async"`` (the sharded mode takes W from ``state.adapt``);
     ``mesh``/``axis_name`` wire the ``workers`` mesh axis of
     ``mode="sharded_async"``.
+
+    ``fuse=True`` lowers the whole pipeline to ONE Pallas flat-buffer kernel
+    per step (:mod:`repro.optim.fuse`): the delayed rings stay flat-resident
+    (build the state with ``init_train_state(..., fuse=True)`` /
+    ``init_sharded_async_state(..., fuse=True)``), the combine hands the
+    fused kernel a packed ``g_eff``, and the step is bit-identical (f32) to
+    the link-by-link execution.  A chain the compiler cannot classify (e.g. a
+    custom link) falls back to link-by-link execution with a single warning.
     """
     assert mode in MODES, f"mode must be one of {MODES}, got {mode!r}"
     apply_fn, transform = _resolve_pipeline(pipeline)
+    fused_flat = False
+    if fuse:
+        fused = _fused_form(pipeline)
+        if fused is None:
+            warnings.warn(
+                "make_step(fuse=True): pipeline is not fuseable (unrecognized "
+                "link or ordering) — falling back to link-by-link execution",
+                stacklevel=2,
+            )
+        else:
+            apply_fn, transform = _resolve_pipeline(fused)
+            fused_flat = True
     alpha_c = _resolve_alpha_c(alpha_c, transform)
     if mode != "sync":
         _check_absorbable_order(transform, mode)
@@ -240,6 +297,14 @@ def make_step(
 
         (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
         return loss, metrics, _constrain_grads(grads, cfg)
+
+    def _check_ring_layout(ring):
+        is_flat = isinstance(ring, jax.Array)
+        assert is_flat == fused_flat, (
+            f"delayed ring layout ({'flat' if is_flat else 'pytree'}) does not "
+            f"match make_step(fuse={fuse}) — initialize the state with the "
+            f"same fuse= flag (init_train_state / init_sharded_async_state)"
+        )
 
     if mode == "sync":
 
@@ -266,7 +331,12 @@ def make_step(
             assert state.delayed is not None, (
                 "async step needs a delayed ring (async_ring > 0)"
             )
+            _check_ring_layout(state.delayed.ring)
             loss, metrics, grads = loss_and_grads(state.params, batch)
+            if fused_flat:
+                # one pack per step (the fresh gradient); the ring, the
+                # combine and the fused apply all stay flat-resident
+                grads = T.pack_flat(grads)
             rng, sub = jax.random.split(state.rng)
             taus = sample_taus(sub, state.adapt.tau_cdf, W)
             alpha = alpha_lookup(state.adapt, taus)
@@ -309,9 +379,14 @@ def make_step(
         assert isinstance(ring, WorkerRing), (
             "sharded async step needs per-worker rings (see init_sharded_async_state)"
         )
+        _check_ring_layout(ring.ring)
         W = adapt.num_workers
 
         loss, metrics, grads = loss_and_grads(state.params, batch)
+        if fused_flat:
+            # flat-resident: the (W, K, N) ring, the per-worker combine and
+            # the fused apply all run over one packed buffer per shard
+            grads = T.pack_flat(grads)
         rng, sub = jax.random.split(state.rng)
         u = jax.random.uniform(sub, (W,))
 
@@ -413,16 +488,24 @@ def init_sharded_async_state(
     adapt: WorkerAdaptState,
     params: Any | None = None,
     mesh=None,
+    fuse: bool = False,
 ) -> TrainState:
     """TrainState for the sharded engine: per-worker rings + WorkerAdaptState.
 
     The worker count is taken from ``adapt``; ring leaves are (W, K, ...).
     Pass ``mesh`` (with a ``workers`` axis) to place every worker-axis leaf
     with :func:`repro.sharding.specs.worker_shardings` up front — otherwise
-    the first compiled step pays a one-time reshard.
+    the first compiled step pays a one-time reshard.  ``fuse=True`` builds
+    the fused layout (flat opt state + one (W, K, N) ring buffer) for a
+    fuseable pipeline; pair it with ``make_step(..., fuse=True)``.
     """
-    state = init_train_state(key, cfg, opt, async_ring=0, adapt=adapt, params=params)
-    wring = init_worker_ring(state.params, ring, adapt.num_workers)
+    state = init_train_state(
+        key, cfg, opt, async_ring=0, adapt=adapt, params=params, fuse=fuse
+    )
+    init_wring = (
+        init_flat_worker_ring if fuse and _fused_form(opt) is not None else init_worker_ring
+    )
+    wring = init_wring(state.params, ring, adapt.num_workers)
     if mesh is not None and "workers" in getattr(mesh, "axis_names", ()):
         from repro.sharding.specs import worker_shardings
 

@@ -575,9 +575,11 @@ class TestLoopNoPerStepSync:
         )
         step = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=4)
         W, n_steps, every = 4, 20, 5
+        # pipeline= accepts the legacy MindTheStep wrapper directly (duck-typed
+        # refresher) — the deprecated mts= alias is covered by its own test.
         state, _ = train_loop(
             step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
-            num_steps=n_steps, log_every=10, mts=mts, refresh_every=every,
+            num_steps=n_steps, log_every=10, pipeline=mts, refresh_every=every,
         )
         # every sampled tau reached the estimator through histogram drains
         assert mts.estimator.n_seen == W * n_steps

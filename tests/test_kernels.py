@@ -1,13 +1,17 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (deliverable c).
 
 All kernels run in interpret mode (CPU executes the kernel body in Python);
-the BlockSpec tiling/grid logic is identical to the TPU target.
+the BlockSpec tiling/grid logic is identical to the TPU target.  The whole
+module carries the ``pallas`` mark — CI runs it on the dedicated ``kernels``
+matrix leg so fused/unfused drift fails fast on CPU runners.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.pallas
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
