@@ -3,24 +3,23 @@
 1. Fit a staleness model to a simulated async execution (paper §IV).
 2. Build the staleness-adaptive step-size schedule (eq. 17 protocol).
 3. Train a small LM with the async MindTheStep step on CPU — the update is
-   one composable pipeline (``chain(scale_by_staleness(...), scale(-lr))``)
-   compiled by ``make_step(..., mode="async")``, with the alpha table /
-   tau CDF / staleness histogram jit-resident in ``TrainState.adapt`` and
-   refreshed online every 20 steps.
+   one composable pipeline (``chain(scale_by_staleness(...), scale(-lr))``),
+   the run is one declarative ``RunSpec`` executed by ``run(spec, hooks)``
+   (the One Run API), with the alpha table / tau CDF / staleness histogram
+   jit-resident in ``TrainState.adapt`` and refreshed online every 20 steps.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import numpy as np
 
 from repro.async_engine import EventSimConfig, simulate_staleness_trace
 from repro.configs import get_config, reduced
 from repro.core import staleness as S
 from repro.core import step_size as SS
-from repro.data import lm_batches
 from repro.optim import transform as T
-from repro.training import init_train_state, make_adapt, make_step, train_loop
+from repro.run import LogHook, RunSpec, run
+from repro.training import make_adapt
 
 M_WORKERS = 8
 ALPHA_C = 0.05
@@ -45,8 +44,10 @@ print(f"E_tau[alpha(tau)] = {sched.expectation(pmf):.4f} (alpha_c = {ALPHA_C})")
 
 # -- 3. async training with delayed gradients + adaptive steps ---------------
 # The whole update is ONE composable pipeline: the staleness link (with the
-# online estimator attached via m=), then the base SGD step.  The tables live
-# in TrainState.adapt (step INPUTS, not closure constants): every 20 steps the
+# online estimator attached via m=), then the base SGD step.  The whole RUN
+# is one declarative RunSpec — engine mode, ring depth, refresh cadence,
+# data, seed — executed by the hook-driven orchestrator.  The tables live in
+# TrainState.adapt (step INPUTS, not closure constants): every 20 steps the
 # host drains the in-jit tau histogram, refits, and swaps fresh tables into
 # the already-compiled step — no retrace, no per-step sync.
 cfg = reduced(get_config("stablelm-1.6b"), d_model=128)
@@ -54,14 +55,15 @@ pipeline = T.chain(
     T.scale_by_staleness(sched, ALPHA_C, m=M_WORKERS, tau_max=63),
     T.scale(-ALPHA_C),
 )
-adapt = make_adapt(sched, poisson, cdf_support=32, tau_max=63)
-state = init_train_state(jax.random.PRNGKey(0), cfg, pipeline, async_ring=32, adapt=adapt)
-step = make_step(cfg, pipeline, mode="async", num_workers=M_WORKERS)
-state, history = train_loop(
-    step, state, lm_batches(cfg.vocab_size, 8, 64, seed=0),
-    num_steps=60, log_every=20, pipeline=pipeline, refresh_every=20,
+spec = RunSpec(
+    cfg=cfg, pipeline=pipeline, mode="async", num_steps=60,
+    batch_size=8, seq_len=64,
+    num_workers=M_WORKERS, ring=32,
+    adapt=make_adapt(sched, poisson, cdf_support=32, tau_max=63),
+    refresh_every=20, seed=0,
 )
+result = run(spec, hooks=[LogHook(log_every=20)])
 est = T.staleness_link(pipeline).estimator
-print(f"\ndone — final loss {history[-1]['loss']:.3f} "
-      f"(started {history[0]['loss']:.3f}); "
+print(f"\ndone — final loss {result.history[-1]['loss']:.3f} "
+      f"(started {result.history[0]['loss']:.3f}); "
       f"online lam estimate {est.fit('poisson').lam:.2f}")

@@ -1,3 +1,15 @@
-from repro.checkpoint.store import save_pytree, load_pytree, save_train_state, load_train_state
+from repro.checkpoint.store import (
+    latest_step,
+    load_pytree,
+    load_train_state,
+    save_pytree,
+    save_train_state,
+)
 
-__all__ = ["save_pytree", "load_pytree", "save_train_state", "load_train_state"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_train_state",
+    "load_train_state",
+    "latest_step",
+]

@@ -1,10 +1,19 @@
-"""Checkpointing: pytree <-> (npz arrays + json structure).
+"""Checkpointing: pytree <-> (npz arrays + json manifest).
 
-Flat-keyed npz for arrays, a json sidecar for the tree structure (so any
-nested dict/dataclass pytree round-trips).  Arrays are gathered to host —
-fine for the CPU validation path; the restore target resharding is the
-caller's concern (pass the restored tree through ``jax.device_put`` with the
-desired shardings).
+Array names in the npz are derived from the pytree's **key paths**
+(``jax.tree_util.tree_flatten_with_path`` + ``keystr``), e.g.
+``.params['embed']['embedding']`` — so a checkpoint is introspectable with
+nothing but ``np.load`` (``data.files`` reads like the state itself) and a
+restore can validate *structure*, not just leaf count: missing or unexpected
+keys raise a :class:`ValueError` naming exactly which paths disagree.
+
+The json sidecar is a manifest (schema tag + the ordered key list), not a
+serialized treedef: the restore target's own structure is the template, which
+is the only thing a treedef string could ever be checked against anyway.
+
+Arrays are gathered to host — fine for the CPU validation path; the restore
+target resharding is the caller's concern (pass the restored tree through
+``jax.device_put`` with the desired shardings).
 """
 
 from __future__ import annotations
@@ -17,39 +26,115 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_pytree", "load_pytree", "save_train_state", "load_train_state"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_train_state",
+    "load_train_state",
+    "latest_step",
+]
 
-_SEP = "␟"  # symbol-for-unit-separator: unlikely in key names
+SCHEMA = "ckpt.v2"  # key-path named leaves (v1 was positional leaf indices)
 
 
-def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], Any]:
-    leaves, treedef = jax.tree.flatten(tree)
-    paths = [f"leaf{_SEP}{i}" for i in range(len(leaves))]
-    arrays = {p: np.asarray(l) for p, l in zip(paths, leaves)}
-    return arrays, treedef
+def _flatten_with_keys(tree: Any) -> tuple[list[str], list[Any], Any]:
+    """(key-path names, leaves, treedef) in flatten order; names are unique
+    by construction (two leaves cannot share a key path)."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in leaves_with_paths]
+    leaves = [leaf for _, leaf in leaves_with_paths]
+    return keys, leaves, treedef
 
 
 def save_pytree(path: str, tree: Any) -> None:
-    """Write ``path``.npz (arrays) + ``path``.json (structure)."""
+    """Write ``path``.npz (key-path-named arrays) + ``path``.json (manifest).
+
+    Extension dtypes numpy itself cannot reload (bfloat16 / float8 register as
+    void kinds) are stored as same-width unsigned views, with the true dtype
+    recorded in the manifest so :func:`load_pytree` can view them back.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    arrays, treedef = _flatten(tree)
-    np.savez(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
-        json.dump({"treedef": str(treedef), "num_leaves": len(arrays)}, f)
+    keys, leaves, _ = _flatten_with_keys(tree)
+    arrays: dict[str, np.ndarray] = {}
+    ext_dtypes: dict[str, str] = {}
+    for k, leaf in zip(keys, leaves):
+        a = np.asarray(leaf)
+        if a.dtype.kind == "V":  # ml_dtypes extension type (bf16, f8, ...)
+            ext_dtypes[k] = a.dtype.name
+            a = a.view(f"u{a.dtype.itemsize}")
+        arrays[k] = a
+    # write-to-tmp + atomic replace: RE-saving an existing step must never
+    # leave a torn npz/json behind an intact 'latest' pointer
+    tmp = path + ".npz.tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path + ".npz")
+    tmp = path + ".json.tmp"
+    with open(tmp, "w") as f:
+        json.dump(
+            {"schema": SCHEMA, "keys": keys, "num_leaves": len(keys), "dtypes": ext_dtypes},
+            f,
+            indent=2,
+        )
+    os.replace(tmp, path + ".json")
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like``.
+
+    Structure is validated key path by key path: a checkpoint whose leaves do
+    not exactly cover the template's raises a :class:`ValueError` naming the
+    missing/unexpected paths (e.g. a fused-layout state fed to an unfused
+    template, or a pipeline with a different link set).  Per-leaf shapes are
+    then checked and dtypes cast to the template's.
+    """
     data = np.load(path + ".npz")
-    leaves_like, treedef = jax.tree.flatten(like)
-    n = len(leaves_like)
-    assert len(data.files) == n, f"checkpoint has {len(data.files)} leaves, expected {n}"
+    try:
+        with open(path + ".json") as f:
+            ext_dtypes = json.load(f).get("dtypes", {})
+    except FileNotFoundError:
+        # save_pytree always writes the manifest (npz first, json second); a
+        # missing one means an interrupted or hand-pruned save.  Defaulting to
+        # "no extension dtypes" would silently value-cast uint views of
+        # bf16/f8 leaves into garbage weights — refuse instead.
+        raise FileNotFoundError(
+            f"checkpoint manifest {path + '.json'!r} is missing (incomplete "
+            "save?) — cannot restore without it; extension-dtype leaves "
+            "(bf16/f8) are stored as uint views whose true dtype lives in "
+            "the manifest"
+        ) from None
+    keys, leaves_like, treedef = _flatten_with_keys(like)
+    files = set(data.files)
+    keyset = set(keys)
+    missing = [k for k in keys if k not in files]
+    extra = [k for k in data.files if k not in keyset]
+    if missing or extra:
+        lines = [f"checkpoint {path!r} does not match the restore template:"]
+        if missing:
+            lines.append(
+                f"  template paths absent from the checkpoint ({len(missing)}): "
+                + ", ".join(missing[:8])
+                + (" ..." if len(missing) > 8 else "")
+            )
+        if extra:
+            lines.append(
+                f"  checkpoint paths absent from the template ({len(extra)}): "
+                + ", ".join(extra[:8])
+                + (" ..." if len(extra) > 8 else "")
+            )
+        lines.append(
+            "  (restore into the state the checkpoint was saved from — same "
+            "engine mode, same fuse= layout, same pipeline)"
+        )
+        raise ValueError("\n".join(lines))
     leaves = []
-    for i, ref in enumerate(leaves_like):
-        arr = data[f"leaf{_SEP}{i}"]
+    for key, ref in zip(keys, leaves_like):
+        arr = data[key]
+        if key in ext_dtypes:
+            arr = arr.view(np.dtype(ext_dtypes[key]))
         if hasattr(ref, "shape"):
             assert tuple(arr.shape) == tuple(ref.shape), (
-                f"leaf {i}: checkpoint shape {arr.shape} != expected {ref.shape}"
+                f"leaf {key}: checkpoint shape {arr.shape} != expected {ref.shape}"
             )
             arr = arr.astype(ref.dtype)
         leaves.append(jnp.asarray(arr))
@@ -58,12 +143,21 @@ def load_pytree(path: str, like: Any) -> Any:
 
 def save_train_state(path: str, state: Any, step: int) -> None:
     save_pytree(os.path.join(path, f"step_{step:08d}"), state)
-    with open(os.path.join(path, "latest"), "w") as f:
+    # atomic pointer swap: a crash mid-update must never leave a truncated
+    # 'latest' (that would brick resume even with complete checkpoints on disk)
+    tmp = os.path.join(path, "latest.tmp")
+    with open(tmp, "w") as f:
         f.write(str(step))
+    os.replace(tmp, os.path.join(path, "latest"))
+
+
+def latest_step(path: str) -> int:
+    """The step recorded by the most recent :func:`save_train_state`."""
+    with open(os.path.join(path, "latest")) as f:
+        return int(f.read().strip())
 
 
 def load_train_state(path: str, like: Any, step: int | None = None) -> tuple[Any, int]:
     if step is None:
-        with open(os.path.join(path, "latest")) as f:
-            step = int(f.read().strip())
+        step = latest_step(path)
     return load_pytree(os.path.join(path, f"step_{step:08d}"), like), step

@@ -6,12 +6,14 @@
         --strategies fixed,eq17,eq26 --optims sgd,adam --steps 20 \
         --out BENCH_scenarios.json
 
-Each cell trains a reduced config for a few steps through the SHARDED async
-engine (per-worker rings + heterogeneous tau samplers under ``shard_map``
-over the ``workers`` mesh axis) and emits one ``BENCH_scenarios.json`` row
-group per cell: final loss with the full loss-vs-updates series in ``meta``,
-wall-clock, and the jit retrace count (an online-adaptation regression would
-show up here as retraces > 1 per cell).
+Each cell is declared as one :class:`~repro.run.RunSpec` and executed by the
+One Run API (:func:`repro.run.run`) through the SHARDED async engine
+(per-worker rings + heterogeneous tau samplers under ``shard_map`` over the
+``workers`` mesh axis); a :class:`~repro.run.BenchHook` emits one
+``BENCH_scenarios.json`` row group per cell: final loss with the full
+loss-vs-updates series in ``meta``, wall-clock, and the jit retrace count
+(an online-adaptation regression would show up here as retraces > 1 per
+cell).
 
 Staleness models are heterogeneous ACROSS workers within each family —
 per-worker geometric p / Poisson lambda / CMP nu spreads, and per-worker
@@ -29,24 +31,19 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
-import jax
 import numpy as np
 
 from repro.async_engine.events import EventSimConfig, simulate_staleness_trace
-from repro.bench_schema import bench_row, write_bench_json
+from repro.bench_schema import write_bench_json
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.core.staleness import CMP, Geometric, Poisson
 from repro.core.step_size import make_schedule
 from repro.data import make_batch_for
 from repro.launch.mesh import make_workers_mesh
 from repro.optim import transform as T
-from repro.training import (
-    init_sharded_async_state,
-    make_step,
-    make_worker_adapt,
-)
+from repro.run import BenchHook, RunSpec, run
+from repro.training import make_worker_adapt
 
 STALENESS_FAMILIES = ("geometric", "poisson", "cmp", "trace")
 STRATEGY_CHOICES = ("fixed", "eq17", "eq26")
@@ -134,7 +131,13 @@ def cell_pipeline(cell: ScenarioCell, sched) -> T.Chain:
 
 
 def run_cell(cell: ScenarioCell, mesh=None) -> list[dict]:
-    """Train one matrix cell; returns its BENCH rows."""
+    """Train one matrix cell through the Run API; returns its BENCH rows.
+
+    All bookkeeping (per-step loss series, wall-clock, the gated jit-retrace
+    count) is :class:`~repro.run.hooks.BenchHook`'s — this function only
+    declares the cell as a :class:`~repro.run.RunSpec`.  The config hash
+    still comes from ``cell.config()``, so blessed baselines stay valid.
+    """
     mesh = make_workers_mesh() if mesh is None else mesh
     cfg = reduced(get_config(cell.arch), d_model=cell.d_model)
     sched = cell_schedule(cell)
@@ -142,41 +145,22 @@ def run_cell(cell: ScenarioCell, mesh=None) -> list[dict]:
     adapt = make_worker_adapt(
         sched.table, worker_models(cell), cdf_support=cell.ring
     )
-    state = init_sharded_async_state(
-        jax.random.PRNGKey(cell.seed), cfg, pipeline, ring=cell.ring, adapt=adapt,
-        mesh=mesh,
-    )
-
-    retraces = []
-    base = make_step(cfg, pipeline, mode="sharded_async", mesh=mesh)
-
-    def counting(s, b):
-        retraces.append(1)  # runs only when jax (re)traces
-        return base(s, b)
-
-    step = jax.jit(counting)
-    t0 = time.perf_counter()
-    losses = []
-    for t in range(cell.steps):
-        batch = make_batch_for(cfg, batch=cell.batch, seq=cell.seq, seed=cell.seed + t)
-        state, metrics = step(state, batch)
-        losses.append(float(np.asarray(metrics["loss"])))
-    wall_s = time.perf_counter() - t0
-
-    config = cell.config()
-    return [
-        bench_row(
-            f"{cell.name}/final_loss", losses[-1], "nll", config,
-            losses=losses, updates=list(range(1, cell.steps + 1)),
-            tau_mean=float(np.asarray(metrics["tau_mean"])),
-            live_frac=float(np.asarray(metrics["live_frac"])),
+    spec = RunSpec(
+        cfg=cfg,
+        pipeline=pipeline,
+        mode="sharded_async",
+        num_steps=cell.steps,
+        batch_fn=lambda t: make_batch_for(
+            cfg, batch=cell.batch, seq=cell.seq, seed=cell.seed + t
         ),
-        bench_row(f"{cell.name}/wall_s", wall_s, "s", config),
-        # noise-free count: ANY retrace beyond the first compile is an
-        # online-adaptation regression (tables must stay step inputs)
-        bench_row(f"{cell.name}/retraces", len(retraces), "count", config,
-                  gate="lower", tol=0.0),
-    ]
+        ring=cell.ring,
+        adapt=adapt,
+        mesh=mesh,
+        seed=cell.seed,
+    )
+    bench = BenchHook(cell.name, cell.config())
+    run(spec, hooks=[bench])
+    return bench.rows
 
 
 def run_matrix(cells: list[ScenarioCell], out: str, logger=print) -> list[dict]:
@@ -184,7 +168,6 @@ def run_matrix(cells: list[ScenarioCell], out: str, logger=print) -> list[dict]:
     rows: list[dict] = []
     failures: list[str] = []
     for cell in cells:
-        t0 = time.perf_counter()
         try:
             cell_rows = run_cell(cell, mesh)
         except Exception as e:  # noqa: BLE001 — matrix must report every cell

@@ -1,4 +1,4 @@
-"""Production training launcher.
+"""Production training launcher (One Run API).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
         --steps 200 --batch 8 --seq 256 --reduced --async_psgd --strategy poisson_momentum
@@ -12,36 +12,30 @@ implicit-momentum magnitude, in step-size units), normalization (eq. 26)
 against the observed tau histogram, clip at 5 alpha_c, drop tau>150.
 
 The update is assembled as ONE gradient-transform pipeline
-(:mod:`repro.optim.transform`) and compiled through the unified
-:func:`~repro.training.steps.make_step` builder:
+(:mod:`repro.optim.transform`), and the run is declared as ONE
+:class:`~repro.run.RunSpec` executed by :func:`repro.run.run` — engine mode
+(``sync``/``async``), fusion, the online refresh policy, and the data stream
+are all spec fields; logging and checkpointing are hooks.  With
+``--refresh_every N`` the compiled step samples W worker taus per tick and
+histograms them in-jit; every N steps the host drains the histogram, refits,
+and swaps fresh tables into the jit-resident :class:`AdaptState` (no
+retrace).  ``--fused`` applies updates through the fused flat-buffer path;
+``--fuse`` lowers the whole pipeline to one Pallas kernel per step.
 
-    chain(scale_by_staleness(schedule, alpha_c, m=W),   # when --async_psgd
-          scale(-lr) [, trace(mu)] | fused_apply(lr, mu))
-
-With ``--refresh_every N`` the adaptation runs online: the compiled step
-samples W worker taus per tick and histograms them in-jit; every N steps the
-host drains the histogram, refits, and swaps fresh tables into the
-jit-resident :class:`AdaptState` (no retrace) — the refresh boundary is
-driven by the pipeline's own staleness link (``train_loop(pipeline=...)``).
-``--fused`` applies updates through the fused flat-buffer path (Pallas
-``adaptive_update`` on TPU).
+Checkpoint/resume is first-class: ``--checkpoint_dir D --checkpoint_every N``
+saves full-fidelity checkpoints (params, optimizer state, delayed rings,
+adaptation tables + histograms, host estimator, rng); add ``--resume`` to
+continue the latest one bit-identically to an uninterrupted run.
 """
 
 from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
-from repro.data import lm_batches
 from repro.optim import transform as T
-from repro.training import (
-    default_adapt_setup,
-    init_train_state,
-    make_step,
-    train_loop,
-)
+from repro.run import CheckpointHook, LogHook, RunSpec, run
+from repro.training import default_adapt_setup
 
 
 def main():
@@ -65,8 +59,24 @@ def main():
     ap.add_argument("--momentum", type=float, default=None,
                     help="heavy-ball mu (adds the trace link; defaults to 0.9 "
                          "when --fused is set; 0.0 is honored)")
+    ap.add_argument("--checkpoint_dir", default=None,
+                    help="full-fidelity checkpoint directory (enables saving)")
+    ap.add_argument("--checkpoint_every", type=int, default=0,
+                    help="save cadence in steps (requires --checkpoint_dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --checkpoint_dir "
+                         "(bit-identical to the uninterrupted run)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint_dir")
+    if args.checkpoint_every and not args.checkpoint_dir:
+        ap.error("--checkpoint_every requires --checkpoint_dir")
+    if args.checkpoint_dir and not args.checkpoint_every and not args.resume:
+        ap.error(
+            "--checkpoint_dir does nothing without --checkpoint_every N "
+            "(to save) and/or --resume (to restore)"
+        )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -81,7 +91,7 @@ def main():
     else:
         base_links = (T.scale(-args.lr),)
 
-    # -- staleness link + step builder ----------------------------------------
+    # -- staleness link + the run spec ----------------------------------------
     adapt = None
     if args.async_psgd:
         sched, model, adapt = default_adapt_setup(args.lr, args.workers, args.ring)
@@ -89,35 +99,74 @@ def main():
         # refreshed table always fills the jit-resident one.
         link = T.scale_by_staleness(sched, args.lr, m=args.workers, tau_max=adapt.tau_max)
         pipeline = T.chain(link, *base_links)
-        step = make_step(
-            cfg, pipeline, mode="async", num_workers=args.workers, fuse=args.fuse
-        )
     else:
         pipeline = T.chain(*base_links)
-        step = make_step(cfg, pipeline, mode="sync", fuse=args.fuse)
 
-    state = init_train_state(
-        jax.random.PRNGKey(args.seed), cfg, pipeline,
-        async_ring=args.ring if args.async_psgd else 0, adapt=adapt, fuse=args.fuse,
-    )
+    import jax
+
     from repro.async_engine.delayed import flat_size
+    from repro.training import init_params
 
-    n_params = flat_size(state.params)
+    # Pre-init the params (same key discipline as init_train_state) so the
+    # header can report the size without a second (TPU-scale) model init.
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    spec = RunSpec(
+        cfg=cfg,
+        pipeline=pipeline,
+        mode="async" if args.async_psgd else "sync",
+        num_steps=args.steps,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        num_workers=args.workers,
+        ring=args.ring if args.async_psgd else 0,
+        adapt=adapt,
+        fuse=args.fuse,
+        refresh_every=args.refresh_every,
+        seed=args.seed,
+        params=params,
+    )
+
+    n_params = flat_size(params)
     print(f"arch={cfg.name} params={n_params / 1e6:.1f}M async={args.async_psgd} "
           f"fused={args.fused} fuse={args.fuse}")
 
-    batches = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
-    state, history = train_loop(
-        step, state, batches, num_steps=args.steps,
-        pipeline=pipeline, refresh_every=args.refresh_every,
-        log_every=max(args.steps // 10, 1),
+    if args.resume:
+        from repro.checkpoint import latest_step
+
+        try:
+            at = latest_step(args.checkpoint_dir)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"--resume: no checkpoint found under {args.checkpoint_dir!r} "
+                "(no 'latest' pointer — did a previous run save with "
+                "--checkpoint_every?)"
+            ) from None
+        if at > args.steps:
+            raise SystemExit(
+                f"--resume: checkpoint is at step {at} but --steps is "
+                f"{args.steps}; pass --steps >= {at} to continue the run"
+            )
+        print(f"resuming at step {at} from {args.checkpoint_dir}")
+
+    hooks = [LogHook(log_every=max(args.steps // 10, 1))]
+    if args.checkpoint_dir and args.checkpoint_every:
+        hooks.append(CheckpointHook(args.checkpoint_dir, every=args.checkpoint_every))
+    result = run(
+        spec,
+        hooks=hooks,
+        resume_from=args.checkpoint_dir if args.resume else None,
     )
+    if not result.history:
+        print(f"nothing to do: checkpoint already at step {result.step} "
+              f"of {args.steps}")
+        return
     if args.async_psgd and args.refresh_every:
         est = T.staleness_link(pipeline).estimator
         lam = est.fit("poisson").lam
         print(f"online estimator: lam={lam:.2f} (m={args.workers}), "
               f"n_seen={est.n_seen}")
-    print(f"final loss: {history[-1]['loss']:.4f}")
+    print(f"final loss: {result.history[-1]['loss']:.4f}")
 
 
 if __name__ == "__main__":

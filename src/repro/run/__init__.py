@@ -1,0 +1,46 @@
+"""The One Run API (PR 5): declarative RunSpec -> Engine -> hook-driven run.
+
+    from repro.run import RunSpec, run, LogHook, CheckpointHook
+
+    spec = RunSpec(cfg=cfg, pipeline=chain(...), mode="async",
+                   num_steps=200, num_workers=8, ring=16, adapt=adapt,
+                   refresh_every=20, seed=0)
+    result = run(spec, hooks=[LogHook(20), CheckpointHook("ckpt", every=50)])
+    # later, after an interruption:
+    result = run(spec, hooks=[LogHook(20)], resume_from="ckpt")
+"""
+
+from repro.run.ckpt import refresh_link_of, restore_checkpoint, save_checkpoint
+from repro.run.engine import (
+    AsyncEngine,
+    Engine,
+    PrebuiltEngine,
+    ShardedAsyncEngine,
+    SyncEngine,
+    make_engine,
+)
+from repro.run.hooks import BenchHook, CheckpointHook, EvalHook, Hook, LogHook
+from repro.run.orchestrator import RunContext, RunResult, run
+from repro.run.spec import MODES, RunSpec
+
+__all__ = [
+    "RunSpec",
+    "MODES",
+    "Engine",
+    "SyncEngine",
+    "AsyncEngine",
+    "ShardedAsyncEngine",
+    "PrebuiltEngine",
+    "make_engine",
+    "Hook",
+    "LogHook",
+    "BenchHook",
+    "EvalHook",
+    "CheckpointHook",
+    "RunContext",
+    "RunResult",
+    "run",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "refresh_link_of",
+]

@@ -1,0 +1,142 @@
+"""Full-fidelity checkpoint/resume for the Run API.
+
+A checkpoint must capture *everything* the next step reads, or the resumed
+trajectory diverges.  Two halves:
+
+* **Device state** — the whole :class:`~repro.training.steps.TrainState`
+  pytree: params, optimizer state (including the fused flat-resident
+  ``{"p", "bufs"}`` layout), delayed rings (pytree and flat ``(K, N)`` /
+  ``(W, K, N)`` layouts), the jit-resident ``AdaptState``/``WorkerAdaptState``
+  tables *and in-jit histograms*, step counter, and rng.  Saved through
+  :mod:`repro.checkpoint.store` (key-path-named npz; restore validates
+  structure against the engine-built template).
+* **Host state** — the adaptation loop's host half, which lives on the
+  pipeline object between steps: the online estimator's float64 histogram +
+  sample count, and the staleness link's current schedule table (rebuilt by
+  past refreshes; the refresh-failure fallback keeps it, so it must survive).
+  Saved as a small sidecar npz and restored by *mutating the live pipeline*,
+  leniently on shape (a refresh may legitimately resize the host table) but
+  strictly on estimator support.
+
+With both halves restored, a resumed run is bit-identical (f32) to the
+uninterrupted one in all three engine modes, fused and unfused — including
+runs whose resume point crosses a ``refresh_every`` boundary (the partial
+in-jit histogram and the estimator counts both round-trip).  Enforced by
+tests/test_run.py.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint.store import load_train_state, save_train_state
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "refresh_link_of",
+]
+
+
+def refresh_link_of(pipeline) -> Any | None:
+    """The host-adaptation handle of ``pipeline``: its ``scale_by_staleness``
+    link, or a legacy MindTheStep-style wrapper itself (whose ``schedule`` /
+    ``estimator`` read through to its inner link, so either handle reaches the
+    same state).  None when the pipeline carries no host-side adaptation
+    state (nothing beyond the device state to persist).
+
+    This is THE resolution — the refresh boundary
+    (:func:`repro.run.engine._refresher_of`) resolves through it too, so the
+    object the checkpoint persists is always the object a refresh mutates.
+    """
+    from repro.optim import transform as T
+
+    if pipeline is None:
+        return None
+    if isinstance(pipeline, T.GradientTransform):
+        return T.staleness_link(pipeline)
+    return pipeline if hasattr(pipeline, "estimator") else None
+
+
+def _host_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}_host.npz")
+
+
+def save_checkpoint(directory: str, state: Any, pipeline: Any, step: int) -> None:
+    """Write device state + host adaptation sidecar for ``step``.
+
+    The host sidecar is written FIRST and the ``latest`` pointer (inside
+    :func:`save_train_state`) last, so a crash mid-save can never leave
+    ``latest`` naming a checkpoint whose sidecar is missing — resume falls
+    back to the previous complete checkpoint instead of refusing.
+    """
+    os.makedirs(directory, exist_ok=True)
+    link = refresh_link_of(pipeline)
+    host: dict[str, np.ndarray] = {}
+    if link is not None:
+        sched = getattr(link, "schedule", None)
+        if sched is not None:
+            host["schedule_table"] = np.asarray(sched.table, np.float64)
+        est = getattr(link, "estimator", None)
+        if est is not None:
+            host["est_counts"] = np.asarray(est.counts, np.float64)
+            host["est_n_seen"] = np.int64(est.n_seen)
+    tmp = _host_path(directory, step) + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **host)
+    os.replace(tmp, _host_path(directory, step))
+    save_train_state(directory, state, step)
+
+
+def restore_checkpoint(
+    directory: str, template_state: Any, pipeline: Any, *, step: int | None = None
+) -> tuple[Any, int]:
+    """Restore ``(state, step)`` and re-arm the pipeline's host state.
+
+    ``template_state`` is a freshly engine-built state with the layout the
+    checkpoint was saved from (same mode, same ``fuse=``); structure mismatch
+    raises with the offending key paths.  The pipeline is mutated in place:
+    its estimator gets the saved counts/n_seen back, its staleness link the
+    saved schedule table — so the next refresh boundary refits from exactly
+    the observations the interrupted run had.
+    """
+    state, step = load_train_state(directory, template_state, step)
+    host_path = _host_path(directory, step)
+    link = refresh_link_of(pipeline)
+    if not os.path.exists(host_path):
+        # pre-Run-API checkpoint: device state only.  Resuming an adaptive run
+        # from one would silently restart the estimator — refuse loudly.
+        assert link is None or getattr(link, "estimator", None) is None, (
+            f"checkpoint {directory!r} step {step} has no host sidecar but the "
+            "pipeline carries an online estimator — it was not saved by "
+            "save_checkpoint; resume cannot be bit-faithful"
+        )
+        return state, step
+    host = np.load(host_path)
+    if link is not None and "schedule_table" in host.files:
+        from repro.core.step_size import StepSizeSchedule
+
+        sched = getattr(link, "schedule", None)
+        name = sched.name if sched is not None else "restored"
+        # lenient on shape by design: a past refresh may have resized the host
+        # table; the saved one is the truth the interrupted run was using
+        link.schedule = StepSizeSchedule(table=np.asarray(host["schedule_table"]), name=name)
+    est = getattr(link, "estimator", None) if link is not None else None
+    if est is not None:
+        assert "est_counts" in host.files, (
+            f"checkpoint {directory!r} step {step}: pipeline has an estimator "
+            "but the host sidecar saved none — was it saved from a different "
+            "pipeline?"
+        )
+        counts = np.asarray(host["est_counts"], np.float64)
+        assert counts.shape == est.counts.shape, (
+            f"estimator support mismatch: checkpoint histogram {counts.shape} "
+            f"!= estimator {est.counts.shape} (tau_max changed between save "
+            "and resume)"
+        )
+        est.counts = counts
+        est.n_seen = int(host["est_n_seen"])
+    return state, step

@@ -1,0 +1,284 @@
+"""Engine protocol: one uniform execution surface per engine mode.
+
+An :class:`Engine` owns the jit boundary of a run and nothing else:
+
+* ``build()``             — initial :class:`~repro.training.steps.TrainState`
+  (params init from ``spec.seed``, optimizer state from the pipeline, delayed
+  rings / adaptation state for the async modes, fused layouts under
+  ``spec.fuse``);
+* ``tick(state, batch)``  — one compiled training step ``-> (state, metrics)``;
+* ``refresh(state)``      — the host-side online-adaptation boundary (drain
+  the in-jit histogram, refit, swap same-shape tables; no retrace).
+
+The three concrete engines wrap the existing factories —
+:func:`~repro.training.steps.make_step`,
+:func:`~repro.training.steps.init_train_state`, and
+:func:`~repro.training.steps.init_sharded_async_state` — so a pipeline means
+the *same update* whichever engine executes it (the PR-3 invariant), and the
+orchestrator (:mod:`repro.run.orchestrator`) never branches on mode.
+
+Every spec-built engine counts jit (re)traces (``engine.retraces``): any
+retrace beyond the first compile is an online-adaptation regression (tables
+must stay step inputs), surfaced by :class:`~repro.run.hooks.BenchHook` as a
+gated bench row.
+
+:class:`PrebuiltEngine` adapts a hand-built ``(step_fn, state)`` pair to the
+same protocol — it is how the deprecated ``train_loop`` shim rides the
+orchestrator without behavior change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+
+from repro.run.spec import RunSpec
+
+__all__ = [
+    "Engine",
+    "SyncEngine",
+    "AsyncEngine",
+    "ShardedAsyncEngine",
+    "PrebuiltEngine",
+    "make_engine",
+]
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The execution surface of one run; see module docstring."""
+
+    pipeline: Any
+
+    def build(self) -> Any: ...
+
+    def tick(self, state: Any, batch: Any) -> tuple[Any, dict]: ...
+
+    def refresh(self, state: Any) -> Any: ...
+
+
+def _refresher_of(pipeline):
+    """The refresh-capable handle of ``pipeline``: a scale_by_staleness link
+    (possibly inside a chain) or a legacy MindTheStep-style wrapper.  Shares
+    :func:`repro.run.ckpt.refresh_link_of`'s resolution, so the checkpointed
+    host state and the object a refresh mutates are always the same."""
+    from repro.run.ckpt import refresh_link_of
+
+    link = refresh_link_of(pipeline)
+    assert link is not None, (
+        "refresh requested but the pipeline has no scale_by_staleness link "
+        "(or estimator-carrying wrapper)"
+    )
+    return link
+
+
+class _EngineBase:
+    """Shared plumbing: trace counting, jit, and the refresh boundary."""
+
+    def __init__(self, spec: RunSpec):
+        self.spec = spec
+        self.pipeline = spec.pipeline
+        self.mesh = spec.mesh
+        self._traces: list[int] = []
+        self._tick: Callable | None = None
+
+    @property
+    def retraces(self) -> int | None:
+        """Times jax (re)traced the step (1 after a healthy run); None when
+        the step arrived pre-compiled (PrebuiltEngine) and cannot be counted."""
+        return len(self._traces)
+
+    def _jit(self, base: Callable) -> Callable:
+        def counting(state, batch):
+            self._traces.append(1)  # runs only when jax (re)traces
+            return base(state, batch)
+
+        return jax.jit(counting)
+
+    def tick(self, state, batch):
+        if self._tick is None:
+            self._tick = self._jit(self._make_step())
+        return self._tick(state, batch)
+
+    def require_refreshable(self, state) -> None:
+        """Fail fast (the orchestrator calls this before the first tick):
+        refresh() needs a refresh-capable pipeline and an AdaptState."""
+        _refresher_of(self.pipeline)
+        assert getattr(state, "adapt", None) is not None, (
+            "refresh requested but the state carries no AdaptState — "
+            "build it with init_adapt/make_adapt and pass it via RunSpec.adapt"
+        )
+
+    def refresh(self, state):
+        from repro.training.adapt import (
+            WorkerAdaptState,
+            host_refresh,
+            worker_host_refresh,
+        )
+
+        self.require_refreshable(state)
+        adapt = state.adapt
+        refresher = _refresher_of(self.pipeline)
+        kwargs = dict(self.spec.refresh_kwargs or {})
+        if isinstance(adapt, WorkerAdaptState):
+            new_adapt = worker_host_refresh(adapt, refresher, mesh=self.mesh, **kwargs)
+        else:
+            new_adapt = host_refresh(adapt, refresher, **kwargs)
+        return dataclasses.replace(state, adapt=new_adapt)
+
+    def _make_step(self) -> Callable:
+        raise NotImplementedError
+
+
+class SyncEngine(_EngineBase):
+    """Synchronous data-parallel engine (paper §III SyncPSGD baseline)."""
+
+    def build(self):
+        from repro.training.steps import init_train_state
+
+        spec = self.spec
+        return init_train_state(
+            jax.random.PRNGKey(spec.seed),
+            spec.cfg,
+            spec.pipeline,
+            adapt=spec.adapt,
+            params=spec.params,
+            fuse=spec.fuse,
+        )
+
+    def _make_step(self):
+        from repro.training.steps import make_step
+
+        spec = self.spec
+        return make_step(spec.cfg, spec.pipeline, mode="sync", alpha_c=spec.alpha_c, fuse=spec.fuse)
+
+
+class AsyncEngine(_EngineBase):
+    """MindTheStep-AsyncPSGD engine: W-worker async-as-delay simulation."""
+
+    def __init__(self, spec: RunSpec):
+        super().__init__(spec)
+        assert spec.ring > 0, "async mode needs RunSpec.ring (delayed-ring depth)"
+        assert spec.adapt is not None, "async mode needs RunSpec.adapt (see make_adapt)"
+
+    def build(self):
+        from repro.training.steps import init_train_state
+
+        spec = self.spec
+        return init_train_state(
+            jax.random.PRNGKey(spec.seed),
+            spec.cfg,
+            spec.pipeline,
+            async_ring=spec.ring,
+            adapt=spec.adapt,
+            params=spec.params,
+            fuse=spec.fuse,
+        )
+
+    def _make_step(self):
+        from repro.training.steps import make_step
+
+        spec = self.spec
+        return make_step(
+            spec.cfg,
+            spec.pipeline,
+            mode="async",
+            alpha_c=spec.alpha_c,
+            num_workers=spec.num_workers,
+            fuse=spec.fuse,
+        )
+
+
+class ShardedAsyncEngine(_EngineBase):
+    """The W-worker simulation under ``shard_map`` over the ``workers`` axis."""
+
+    def __init__(self, spec: RunSpec):
+        super().__init__(spec)
+        assert spec.ring > 0, "sharded_async mode needs RunSpec.ring"
+        assert spec.adapt is not None, (
+            "sharded_async mode needs RunSpec.adapt (a WorkerAdaptState; "
+            "see make_worker_adapt)"
+        )
+        if self.mesh is None:
+            from repro.launch.mesh import make_workers_mesh
+
+            self.mesh = make_workers_mesh()
+
+    def build(self):
+        from repro.training.steps import init_sharded_async_state
+
+        spec = self.spec
+        return init_sharded_async_state(
+            jax.random.PRNGKey(spec.seed),
+            spec.cfg,
+            spec.pipeline,
+            ring=spec.ring,
+            adapt=spec.adapt,
+            params=spec.params,
+            mesh=self.mesh,
+            fuse=spec.fuse,
+        )
+
+    def _make_step(self):
+        from repro.training.steps import make_step
+
+        spec = self.spec
+        return make_step(
+            spec.cfg,
+            spec.pipeline,
+            mode="sharded_async",
+            alpha_c=spec.alpha_c,
+            mesh=self.mesh,
+            axis_name=spec.axis_name,
+            fuse=spec.fuse,
+        )
+
+
+class PrebuiltEngine(_EngineBase):
+    """Adapter for a hand-built ``(step_fn, state)`` pair (train_loop shim).
+
+    ``step_fn`` is jitted here unless it already is (``.lower`` duck check —
+    the historical ``train_loop`` contract); a pre-compiled step cannot be
+    trace-counted, so ``retraces`` is None in that case.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        state: Any,
+        *,
+        pipeline=None,
+        mesh=None,
+        spec: RunSpec | None = None,
+    ):
+        super().__init__(spec if spec is not None else RunSpec())
+        self.pipeline = pipeline
+        self.mesh = mesh
+        self._state = state
+        if hasattr(step_fn, "lower"):
+            self._tick = step_fn
+            self._precompiled = True
+        else:
+            self._tick = self._jit(step_fn)
+            self._precompiled = False
+
+    @property
+    def retraces(self) -> int | None:
+        return None if self._precompiled else len(self._traces)
+
+    def build(self):
+        return self._state
+
+
+_ENGINES = {
+    "sync": SyncEngine,
+    "async": AsyncEngine,
+    "sharded_async": ShardedAsyncEngine,
+}
+
+
+def make_engine(spec: RunSpec) -> Engine:
+    """The engine for ``spec.mode`` (sync | async | sharded_async)."""
+    return _ENGINES[spec.mode](spec)

@@ -1,0 +1,213 @@
+"""Hook lifecycle protocol + the built-in hooks.
+
+The orchestrator (:func:`repro.run.run`) drives a fixed loop — build, tick,
+refresh at boundaries, end — and everything else (logging, benchmarking,
+evaluation, checkpointing) is a :class:`Hook` observing it:
+
+    on_start(ctx)    once, before the first tick (after a resume restore)
+    on_tick(ctx)     after every tick (and after any refresh at that step)
+    on_refresh(ctx)  after each online-adaptation refresh boundary
+    on_end(ctx)      once, after the last tick
+
+``ctx`` is the live :class:`~repro.run.orchestrator.RunContext`; hooks read
+``ctx.step`` / ``ctx.metrics`` / ``ctx.state`` and may append host-side rows
+to ``ctx.history``.  Hooks never mutate the training state — state evolution
+belongs to the engine alone.
+
+Built-ins:
+
+* :class:`LogHook`        — train_loop-style console lines + history rows.
+* :class:`BenchHook`      — bench.v1 rows (loss series, wall-clock, gated
+  retrace count); replaces the scenario runner's bespoke timing code.
+* :class:`EvalHook`       — periodic evaluation callback.
+* :class:`CheckpointHook` — full-fidelity save via :mod:`repro.run.ckpt`
+  (device state + host estimator sidecar) at a fixed cadence.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["Hook", "LogHook", "BenchHook", "EvalHook", "CheckpointHook"]
+
+
+class Hook:
+    """Base lifecycle hook; every callback is optional (default: no-op)."""
+
+    def on_start(self, ctx) -> None:
+        pass
+
+    def on_tick(self, ctx) -> None:
+        pass
+
+    def on_refresh(self, ctx) -> None:
+        pass
+
+    def on_end(self, ctx) -> None:
+        pass
+
+
+def _host_metrics(metrics: dict) -> dict:
+    return {k: float(np.asarray(v)) for k, v in metrics.items()}
+
+
+class LogHook(Hook):
+    """Console logging + history rows, byte-compatible with the historical
+    ``train_loop`` output (the shim parity test rides on it)."""
+
+    def __init__(self, log_every: int = 50, logger: Callable[[str], None] = print):
+        self.log_every = max(int(log_every), 1)
+        self.logger = logger
+        self._t0 = 0.0
+
+    def on_start(self, ctx) -> None:
+        self._t0 = time.perf_counter()
+
+    def on_tick(self, ctx) -> None:
+        if ctx.step % self.log_every == 0 or ctx.is_last:
+            host = _host_metrics(ctx.metrics)
+            host["step"] = ctx.step
+            host["wall_s"] = time.perf_counter() - self._t0
+            ctx.history.append(host)
+            self.logger(
+                f"step {ctx.step:6d}  loss {host.get('loss', float('nan')):.4f}  "
+                f"({host['wall_s']:.1f}s)"
+            )
+
+
+class BenchHook(Hook):
+    """Emit bench.v1 rows for one run: final loss with the full
+    loss-vs-updates series, wall-clock, and the gated jit retrace count.
+
+    ``name`` prefixes the row names (``{name}/final_loss`` etc.); ``config``
+    is the exact cell configuration dict whose hash keys baseline comparison
+    (:mod:`benchmarks.bench_gate`) — pass the same dict the blessed baselines
+    were produced from and the hashes stay valid.  Rows are available as
+    ``hook.rows`` after the run (and in ``ctx.records[name]``).
+
+    The per-step loss read intentionally blocks on the device each tick —
+    matching the historical scenario-runner timing so wall-clock rows stay
+    comparable across the migration.
+    """
+
+    def __init__(self, name: str, config: dict | str):
+        self.name = str(name)
+        self.config = config
+        self.rows: list[dict] = []
+        self._losses: list[float] = []
+        self._t0 = 0.0
+        self._wall_s = 0.0
+
+    def on_start(self, ctx) -> None:
+        self._t0 = time.perf_counter()
+
+    def on_tick(self, ctx) -> None:
+        self._losses.append(float(np.asarray(ctx.metrics["loss"])))
+        self._wall_s = time.perf_counter() - self._t0
+
+    def on_end(self, ctx) -> None:
+        from repro.bench_schema import bench_row
+
+        metrics = ctx.metrics or {}
+        extras = {
+            k: float(np.asarray(metrics[k]))
+            for k in ("tau_mean", "live_frac")
+            if k in metrics
+        }
+        self.rows = [
+            bench_row(
+                f"{self.name}/final_loss",
+                self._losses[-1] if self._losses else float("nan"),
+                "nll",
+                self.config,
+                losses=self._losses,
+                updates=list(range(1, len(self._losses) + 1)),
+                **extras,
+            ),
+            bench_row(f"{self.name}/wall_s", self._wall_s, "s", self.config),
+        ]
+        retraces = getattr(ctx.engine, "retraces", None)
+        if retraces is not None:
+            # noise-free count: ANY retrace beyond the first compile is an
+            # online-adaptation regression (tables must stay step inputs)
+            self.rows.append(
+                bench_row(
+                    f"{self.name}/retraces",
+                    retraces,
+                    "count",
+                    self.config,
+                    gate="lower",
+                    tol=0.0,
+                )
+            )
+        ctx.records[self.name] = self.rows
+
+
+class EvalHook(Hook):
+    """Run ``eval_fn(state) -> dict`` every ``every`` steps (and at the end).
+
+    Records land in ``hook.records`` (and ``ctx.records[prefix]``), NOT in
+    ``ctx.history`` — history rows keep the training-metrics shape
+    (``history[-1]["loss"]`` must stay valid whatever hooks are installed).
+    """
+
+    def __init__(
+        self,
+        eval_fn: Callable[[Any], dict],
+        every: int,
+        *,
+        prefix: str = "eval",
+        logger: Callable[[str], None] | None = None,
+    ):
+        self.eval_fn = eval_fn
+        self.every = max(int(every), 1)
+        self.prefix = prefix
+        self.logger = logger
+        self.records: list[dict] = []
+
+    def on_tick(self, ctx) -> None:
+        if ctx.step % self.every != 0 and not ctx.is_last:
+            return
+        row = {"step": ctx.step}
+        row.update(
+            {f"{self.prefix}/{k}": v for k, v in _host_metrics(self.eval_fn(ctx.state)).items()}
+        )
+        self.records.append(row)
+        ctx.records[self.prefix] = self.records
+        if self.logger is not None:
+            body = "  ".join(f"{k} {v:.4f}" for k, v in row.items() if k != "step")
+            self.logger(f"eval @ step {ctx.step}: {body}")
+
+
+class CheckpointHook(Hook):
+    """Full-fidelity checkpoint every ``every`` steps (see repro.run.ckpt).
+
+    Saves the whole TrainState pytree plus the pipeline's host adaptation
+    state (estimator counts, schedule table), so ``run(spec,
+    resume_from=directory)`` continues bit-identically.  ``at_end=True``
+    additionally saves after the final step (skipped when the cadence
+    already did).
+    """
+
+    def __init__(self, directory: str, every: int = 0, *, at_end: bool = False):
+        self.directory = str(directory)
+        self.every = int(every)
+        self.at_end = bool(at_end)
+        self.saved_steps: list[int] = []
+
+    def _save(self, ctx) -> None:
+        from repro.run.ckpt import save_checkpoint
+
+        save_checkpoint(self.directory, ctx.state, ctx.engine.pipeline, ctx.step)
+        self.saved_steps.append(ctx.step)
+
+    def on_tick(self, ctx) -> None:
+        if self.every and ctx.step % self.every == 0:
+            self._save(ctx)
+
+    def on_end(self, ctx) -> None:
+        if self.at_end and ctx.step and ctx.step not in self.saved_steps:
+            self._save(ctx)

@@ -1,0 +1,99 @@
+"""RunSpec: the declarative description of one training run.
+
+One dataclass captures everything the orchestrator needs to *reconstruct* a
+run from nothing — model config, update pipeline, engine mode, fusion flag,
+data source, refresh policy, and seed.  That reconstructibility is what makes
+first-class resume possible: ``run(spec, resume_from=dir)`` rebuilds the same
+engine, restores the checkpointed state into it, and continues bit-identically
+to the uninterrupted run (enforced by tests/test_run.py).
+
+Data source (resolved in this order):
+
+* ``batch_fn`` — ``step_index -> batch``; the preferred, *directly resumable*
+  form (a resumed run starts calling it at the restored step).
+* ``batches``  — any iterable; on resume the orchestrator fast-forwards
+  ``start_step`` items (exact for the deterministic generators in
+  :mod:`repro.data`).
+* neither      — the default LM stream
+  ``lm_batches(cfg.vocab_size, batch_size, seq_len, seed=seed)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator
+
+MODES = ("sync", "async", "sharded_async")
+
+__all__ = ["RunSpec", "MODES"]
+
+
+@dataclasses.dataclass
+class RunSpec:
+    """Declarative run description; see module docstring.
+
+    ``cfg`` is a model config from :mod:`repro.configs` (may be None only for
+    the prebuilt-engine path used by the ``train_loop`` shim).  ``pipeline``
+    is a :func:`repro.optim.transform.chain` (or a legacy Optimizer shim) —
+    the single update definition shared by all three engine modes.  The async
+    modes additionally need ``ring`` (delayed-gradient ring depth) and
+    ``adapt`` (:class:`~repro.training.adapt.AdaptState` for ``async``,
+    ``WorkerAdaptState`` for ``sharded_async``).
+    """
+
+    cfg: Any = None
+    pipeline: Any = None
+    mode: str = "sync"
+    num_steps: int = 100
+
+    # -- data source ---------------------------------------------------------
+    batch_fn: Callable[[int], Any] | None = None
+    batches: Iterable[Any] | None = None
+    batch_size: int = 8
+    seq_len: int = 128
+
+    # -- engine knobs --------------------------------------------------------
+    num_workers: int = 1
+    ring: int = 0
+    adapt: Any = None
+    mesh: Any = None
+    axis_name: str = "workers"
+    fuse: bool = False
+    alpha_c: float | None = None
+    params: Any = None  # pre-initialized params (default: init from seed)
+
+    # -- refresh policy (online adaptation boundary) -------------------------
+    refresh_every: int = 0
+    refresh_kwargs: dict | None = None
+
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.mode in MODES, f"mode must be one of {MODES}, got {self.mode!r}"
+        assert self.num_steps >= 0, f"num_steps must be >= 0, got {self.num_steps}"
+
+    def batch_stream(self, start_step: int = 0) -> Iterator[Any]:
+        """Batches for steps ``start_step, start_step + 1, ...`` (resolved per
+        the module docstring; iterables are fast-forwarded on resume)."""
+        if self.batch_fn is not None:
+
+            def gen():
+                t = start_step
+                while True:
+                    yield self.batch_fn(t)
+                    t += 1
+
+            return gen()
+        if self.batches is not None:
+            it = iter(self.batches)
+        else:
+            assert self.cfg is not None, (
+                "RunSpec has no data source: set batch_fn/batches, or cfg for "
+                "the default lm_batches stream"
+            )
+            from repro.data import lm_batches
+
+            it = lm_batches(self.cfg.vocab_size, self.batch_size, self.seq_len, seed=self.seed)
+        for _ in range(start_step):
+            next(it)  # deterministic generators make the fast-forward exact
+        return it

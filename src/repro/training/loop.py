@@ -1,48 +1,22 @@
-"""Host-side training loop with online staleness adaptation.
+"""DEPRECATED: ``train_loop`` is a shim over the One Run API.
 
-The loop owns the non-jit concerns: stepping the data iterator, metric
-aggregation, checkpointing, and the *refresh boundary* of the paper's online
-adaptation.  The compiled step does everything per-step (tau sampling, alpha
-gather, histogram scatter-add) on-device; the host touches adaptation state
-only every ``refresh_every`` steps, where :func:`~repro.training.adapt
-.host_refresh` drains the in-jit histogram, refits the staleness model, and
-feeds fresh tables back in as ordinary step inputs — no per-step blocking
-device->host transfer, no retrace.
+New code should use :func:`repro.run.run` with a :class:`repro.run.RunSpec`
+and hooks — see the README "Run API" section for the migration table.  This
+shim adapts the historical ``(step_fn, state, batches)`` signature onto the
+orchestrator via a :class:`~repro.run.engine.PrebuiltEngine` and a
+:class:`~repro.run.hooks.LogHook`; its trajectory, history rows, and log
+lines are bit-identical to calling ``run`` directly (regression-tested in
+tests/test_run.py).
 
-Refresh plumbing takes the *pipeline* itself: pass the ``chain(...)`` the
-step was built from (or its ``scale_by_staleness`` link, or a legacy
-``MindTheStep`` wrapper) as ``pipeline=`` — the loop finds the staleness link
-and drives the right refresh boundary for the state's adapt type
-(``host_refresh`` for :class:`~repro.training.adapt.AdaptState`,
-``worker_host_refresh`` for ``WorkerAdaptState``).  The old ``mts=`` kwarg
-remains as a deprecated alias.
+The ``mts=`` kwarg (deprecated in PR 3) has been removed: pass the pipeline
+(or its ``scale_by_staleness`` link) as ``pipeline=``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-import warnings
 from typing import Any, Callable, Iterable
 
-import jax
-import numpy as np
-
 __all__ = ["train_loop"]
-
-
-def _refresher_of(pipeline):
-    """The refresh-capable handle of ``pipeline``: a scale_by_staleness link
-    (possibly inside a chain) or a legacy MindTheStep-style wrapper."""
-    from repro.optim import transform as T
-
-    if isinstance(pipeline, T.GradientTransform):
-        link = T.staleness_link(pipeline)
-        assert link is not None, (
-            "refresh_every set but the pipeline has no scale_by_staleness link"
-        )
-        return link
-    return pipeline  # MindTheStep duck type (estimator/alpha_c/refresh/schedule)
 
 
 def train_loop(
@@ -59,66 +33,37 @@ def train_loop(
     logger: Callable[[str], None] = print,
     checkpoint_fn: Callable[[Any, int], None] | None = None,
     checkpoint_every: int = 0,
-    mts=None,
 ) -> tuple[Any, list[dict]]:
     """Run ``num_steps`` of ``step_fn`` over ``batches``; returns (state, history).
 
-    Pass ``pipeline`` (the chain the step was built from — its
-    ``scale_by_staleness(..., m=...)`` link must carry an estimator) plus
-    ``refresh_every`` to enable online adaptation: the state must carry an
-    :class:`~repro.training.adapt.AdaptState` or ``WorkerAdaptState``
-    (``state.adapt``), which is refreshed in place of the old closure-swap —
-    the jitted step is never re-traced.  ``mesh`` is only consulted for the
-    sharded engine's histogram psum-merge.
-
-    ``mts=`` (a legacy :class:`~repro.optim.mindthestep.MindTheStep`) is a
-    deprecated alias for ``pipeline=``.
+    Deprecated shim over :func:`repro.run.run` (see module docstring).  Pass
+    ``pipeline`` (the chain the step was built from) plus ``refresh_every``
+    to enable online adaptation; ``mesh`` is only consulted for the sharded
+    engine's histogram psum-merge.
     """
-    from repro.training.adapt import WorkerAdaptState, host_refresh, worker_host_refresh
+    from repro.run import Hook, LogHook, PrebuiltEngine, RunSpec, run
 
-    if mts is not None:
-        warnings.warn(
-            "train_loop(mts=...) is deprecated; pass the gradient-transform "
-            "pipeline (or its scale_by_staleness link) as pipeline=",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        assert pipeline is None, "pass either pipeline= or the deprecated mts=, not both"
-        pipeline = mts
-
-    refresher = None
     if pipeline is not None and refresh_every:
-        refresher = _refresher_of(pipeline)
+        from repro.run.engine import _refresher_of
 
-    history: list[dict] = []
-    jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
-    t0 = time.perf_counter()
-    it = iter(batches)
+        _refresher_of(pipeline)  # fail fast: pipeline must carry a refresher
+    spec = RunSpec(
+        pipeline=pipeline,
+        num_steps=num_steps,
+        batches=batches,
+        mesh=mesh,
+        refresh_every=refresh_every if pipeline is not None else 0,
+        refresh_kwargs={"logger": logger, **(refresh_kwargs or {})},
+    )
+    hooks: list[Hook] = [LogHook(log_every=log_every, logger=logger)]
+    if checkpoint_fn is not None and checkpoint_every:
 
-    for i in range(num_steps):
-        batch = next(it)
-        state, metrics = jitted(state, batch)
-        if refresher is not None and (i + 1) % refresh_every == 0:
-            adapt = getattr(state, "adapt", None)
-            assert adapt is not None, (
-                "refresh_every set but the state carries no AdaptState — "
-                "build it with init_adapt/make_adapt and pass it to init_train_state"
-            )
-            kwargs = {"logger": logger, **(refresh_kwargs or {})}
-            if isinstance(adapt, WorkerAdaptState):
-                new_adapt = worker_host_refresh(adapt, refresher, mesh=mesh, **kwargs)
-            else:
-                new_adapt = host_refresh(adapt, refresher, **kwargs)
-            state = dataclasses.replace(state, adapt=new_adapt)
-        if (i + 1) % log_every == 0 or i == num_steps - 1:
-            host = {k: float(np.asarray(v)) for k, v in metrics.items()}
-            host["step"] = i + 1
-            host["wall_s"] = time.perf_counter() - t0
-            history.append(host)
-            logger(
-                f"step {i + 1:6d}  loss {host.get('loss', float('nan')):.4f}  "
-                f"({host['wall_s']:.1f}s)"
-            )
-        if checkpoint_fn is not None and checkpoint_every and (i + 1) % checkpoint_every == 0:
-            checkpoint_fn(state, i + 1)
-    return state, history
+        class _FnCheckpoint(Hook):
+            def on_tick(self, ctx):
+                if ctx.step % checkpoint_every == 0:
+                    checkpoint_fn(ctx.state, ctx.step)
+
+        hooks.append(_FnCheckpoint())
+    engine = PrebuiltEngine(step_fn, state, pipeline=pipeline, mesh=mesh, spec=spec)
+    result = run(spec, hooks=hooks, engine=engine)
+    return result.state, result.history

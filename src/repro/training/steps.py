@@ -76,6 +76,7 @@ from repro.training.adapt import (
 
 __all__ = [
     "TrainState",
+    "init_params",
     "init_train_state",
     "init_sharded_async_state",
     "make_step",
@@ -99,6 +100,19 @@ class TrainState:
     adapt: AdaptState | None = None
 
 
+def init_params(key: jax.Array, cfg) -> Any:
+    """The params :func:`init_train_state` would initialize from ``key``.
+
+    THE single source of the key-split discipline (params from the first
+    sub-key, rng from the second): callers that need the params up front
+    (e.g. to report the model size before building the state) use this and
+    pass the result back via ``params=`` — bit-identical to letting
+    ``init_train_state`` init them itself.
+    """
+    kp, _ = jax.random.split(key)
+    return M.init_model(kp, cfg)
+
+
 def init_train_state(
     key: jax.Array,
     cfg,
@@ -119,9 +133,9 @@ def init_train_state(
     pipeline falls back to the standard layout silently — ``make_step`` owns
     the (single) fallback warning.
     """
-    kp, kr = jax.random.split(key)
+    _, kr = jax.random.split(key)
     if params is None:
-        params = M.init_model(kp, cfg)
+        params = init_params(key, cfg)
     if cfg.param_dtype != "float32":
         # low-precision parameter storage (halves weight HBM traffic; the
         # optimizer update still accumulates in f32 before the cast back)

@@ -29,6 +29,7 @@ from repro.training import (
     make_adapt,
     make_async_train_step,
     make_step,
+    make_train_step,
     sample_taus,
     train_loop,
 )
@@ -526,22 +527,17 @@ class TestLoopPipelineRefresh:
         assert int(np.asarray(state.adapt.hist).sum()) == 0
         assert link.schedule.name.startswith("poisson_momentum")
 
-    def test_deprecated_mts_kwarg_still_works(self, small_cfg):
+    def test_removed_mts_kwarg_rejected(self, small_cfg):
+        """train_loop(mts=) was removed with the Run API migration (its last
+        caller moved to pipeline= in PR 4): passing it now is a TypeError."""
         opt = sgd(0.05)
-        model = Poisson(3.0)
-        sched = make_schedule("poisson_momentum", 0.05, model, K=1.0, tau_max=31)
-        adapt = make_adapt(sched, model, cdf_support=16, tau_max=31)
-        mts = mindthestep(opt, sched, 0.05, m=3, tau_max=31)
-        state = init_train_state(
-            jax.random.PRNGKey(0), small_cfg, opt, async_ring=16, adapt=adapt
-        )
-        step = make_async_train_step(small_cfg, opt, alpha_c=0.05, num_workers=2)
-        with pytest.warns(DeprecationWarning, match="pipeline="):
-            state, _ = train_loop(
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, opt)
+        step = make_train_step(small_cfg, opt)
+        with pytest.raises(TypeError, match="mts"):
+            train_loop(
                 step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
-                num_steps=4, log_every=4, mts=mts, refresh_every=2,
+                num_steps=1, mts=object(),
             )
-        assert mts.estimator.n_seen == 2 * 4
 
 
 class TestSyncStepThreadsAdapt:

@@ -1,0 +1,350 @@
+"""The One Run API: Engine protocol, hooks, and full-fidelity checkpoint/resume.
+
+The load-bearing guarantee of this suite: a run interrupted at step k and
+resumed from its checkpoint is BIT-IDENTICAL (f32) to the uninterrupted run —
+losses and the entire final TrainState — in all three engine modes, fused and
+unfused, including resumes that cross a ``refresh_every`` boundary (the in-jit
+staleness histogram and the host estimator both survive the round-trip).
+
+Also covered: the key-path checkpoint store (introspectable npz names,
+structural validation), the ``train_loop`` deprecated-shim parity (shim
+trajectory == direct ``run``), and the built-in hook behaviors.
+"""
+
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config, reduced
+from repro.core.staleness import Geometric, Poisson
+from repro.core.step_size import make_schedule
+from repro.data import lm_batches, make_batch_for
+from repro.optim import transform as T
+from repro.run import (
+    BenchHook,
+    CheckpointHook,
+    EvalHook,
+    Hook,
+    LogHook,
+    RunSpec,
+    run,
+)
+from repro.training import init_train_state, make_adapt, make_step, make_worker_adapt, train_loop
+
+TAU_MAX = 31
+RING = 8
+LR = 0.05
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return reduced(get_config("stablelm-1.6b"), d_model=64)
+
+
+@pytest.fixture(scope="module")
+def workers_mesh():
+    from repro.launch.mesh import make_workers_mesh
+
+    return make_workers_mesh()
+
+
+def _sched():
+    return make_schedule("poisson_momentum", LR, Poisson(3.0), K=1.0, tau_max=TAU_MAX)
+
+
+def _spec_for(mode, cfg, *, fuse=False, num_steps=6, refresh_every=2, mesh=None):
+    """A fresh RunSpec (fresh pipeline + adapt: estimator state starts empty)."""
+    sched = _sched()
+    if mode == "sync":
+        # momentum chain: exercises real optimizer state in the checkpoint
+        pipeline = T.chain(T.scale(-LR), T.trace(0.9))
+        adapt, ring, refresh_every = None, 0, 0
+    else:
+        link = T.scale_by_staleness(sched, LR, m=4, tau_max=TAU_MAX)
+        pipeline = T.chain(link, T.scale(-LR))
+        if mode == "async":
+            adapt = make_adapt(sched, Poisson(3.0), cdf_support=RING, tau_max=TAU_MAX)
+        else:
+            # heterogeneous workers: one fitted model, one replayed trace
+            samplers = [Geometric(p=0.3), np.asarray([0, 1, 2, 1, 3], np.int64)]
+            adapt = make_worker_adapt(
+                sched.table[: TAU_MAX + 1], samplers, cdf_support=RING
+            )
+        ring = RING
+    return RunSpec(
+        cfg=cfg,
+        pipeline=pipeline,
+        mode=mode,
+        num_steps=num_steps,
+        batch_fn=lambda t: make_batch_for(cfg, batch=2, seq=16, seed=100 + t),
+        num_workers=4,
+        ring=ring,
+        adapt=adapt,
+        mesh=mesh,
+        fuse=fuse,
+        refresh_every=refresh_every,
+        seed=0,
+    )
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class _Losses(Hook):
+    """Per-step f32 losses, recorded without touching wall-clock fields."""
+
+    def __init__(self):
+        self.losses = []
+
+    def on_tick(self, ctx):
+        self.losses.append(float(np.asarray(ctx.metrics["loss"])))
+
+
+class TestStore:
+    def test_npz_keys_are_key_paths(self, tmp_path, key):
+        tree = {"params": {"w": jax.random.normal(key, (3, 2))}, "step": jnp.int32(7)}
+        save_pytree(str(tmp_path / "ck"), tree)
+        data = np.load(str(tmp_path / "ck.npz"))
+        assert sorted(data.files) == ["['params']['w']", "['step']"]
+
+    def test_structure_mismatch_names_paths(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), {"a": jnp.ones(3), "b": jnp.zeros(2)})
+        with pytest.raises(ValueError) as e:
+            load_pytree(str(tmp_path / "ck"), {"a": jnp.ones(3), "c": jnp.zeros(2)})
+        msg = str(e.value)
+        assert "['c']" in msg and "['b']" in msg
+        assert "does not match the restore template" in msg
+
+    def test_extension_dtype_roundtrip(self, tmp_path, key):
+        tree = {"g": jax.random.normal(key, (4,)).astype(jnp.bfloat16)}
+        save_pytree(str(tmp_path / "ck"), tree)
+        back = load_pytree(str(tmp_path / "ck"), tree)
+        assert back["g"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(tree["g"]).view(np.uint16), np.asarray(back["g"]).view(np.uint16)
+        )
+
+    def test_train_state_checkpoint_introspectable(self, tmp_path, small_cfg):
+        pipeline = T.chain(T.scale(-LR))
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, pipeline)
+        save_pytree(str(tmp_path / "st"), state)
+        names = np.load(str(tmp_path / "st.npz")).files
+        assert any(n.startswith(".params") for n in names)
+        assert ".step" in names and ".rng" in names
+
+
+class TestResumeParity:
+    """save at k, restore, run to n == uninterrupted run — bitwise (f32)."""
+
+    @pytest.mark.parametrize("fuse", [False, True], ids=["unfused", "fused"])
+    @pytest.mark.parametrize("mode", ["sync", "async", "sharded_async"])
+    def test_resume_bit_identical(self, mode, fuse, small_cfg, workers_mesh, tmp_path):
+        mesh = workers_mesh if mode == "sharded_async" else None
+        ckpt = str(tmp_path / f"{mode}-{fuse}")
+        save_at, n = 3, 6
+
+        # -- uninterrupted reference, checkpointing at step 3 -----------------
+        spec_a = _spec_for(mode, small_cfg, fuse=fuse, num_steps=n, mesh=mesh)
+        track_a = _Losses()
+        res_a = run(spec_a, hooks=[track_a, CheckpointHook(ckpt, every=save_at)])
+
+        # refresh_every=2: the step-3 checkpoint holds a PARTIAL in-jit
+        # histogram (step 3's taus, drained again only at step 4) — the
+        # resume below crosses that refresh boundary.
+        if mode != "sync":
+            saved = glob.glob(os.path.join(ckpt, f"step_{save_at:08d}.npz"))
+            assert saved, "checkpoint at the save step must exist"
+            hist_keys = [
+                k for k in np.load(saved[0]).files if k.startswith(".adapt.hist")
+            ]
+            hist_sum = sum(int(np.load(saved[0])[k].sum()) for k in hist_keys)
+            assert hist_sum > 0, "partial histogram must be captured mid-boundary"
+
+        # -- resumed run (fresh pipeline/adapt/estimator, restored at 3) ------
+        spec_b = _spec_for(mode, small_cfg, fuse=fuse, num_steps=n, mesh=mesh)
+        track_b = _Losses()
+        res_b = run(spec_b, hooks=[track_b], resume_from=ckpt, resume_step=save_at)
+
+        assert res_b.start_step == save_at
+        assert track_b.losses == track_a.losses[save_at:], (
+            f"resumed losses diverged: {track_b.losses} vs {track_a.losses[save_at:]}"
+        )
+        _assert_trees_equal(res_a.state, res_b.state)
+
+        if mode != "sync":
+            est_a = T.staleness_link(spec_a.pipeline).estimator
+            est_b = T.staleness_link(spec_b.pipeline).estimator
+            assert est_a.n_seen == est_b.n_seen
+            np.testing.assert_array_equal(est_a.counts, est_b.counts)
+
+    def test_resume_rejects_wrong_layout(self, small_cfg, tmp_path):
+        """A fused-layout checkpoint fed to an unfused template fails loudly
+        with the offending key paths (the store's structural validation)."""
+        ckpt = str(tmp_path / "layout")
+        spec = _spec_for("async", small_cfg, fuse=True, num_steps=3, refresh_every=0)
+        run(spec, hooks=[CheckpointHook(ckpt, every=3)])
+        spec2 = _spec_for("async", small_cfg, fuse=False, num_steps=3, refresh_every=0)
+        with pytest.raises(ValueError, match="does not match the restore template"):
+            run(spec2, resume_from=ckpt)
+
+    def test_misconfigured_refresh_fails_before_first_tick(self, small_cfg):
+        """refresh_every without a refresh-capable pipeline/adapt must fail
+        up front, not waste a partial run before the first boundary."""
+        ticked = []
+        spec = _spec_for("sync", small_cfg, num_steps=4)
+        spec.refresh_every = 2  # sync spec: no staleness link, no adapt
+
+        class Probe(Hook):
+            def on_tick(self, ctx):
+                ticked.append(ctx.step)
+
+        with pytest.raises(AssertionError, match="refresh"):
+            run(spec, hooks=[Probe()])
+        assert ticked == [], "misconfiguration must be caught before any step runs"
+
+    def test_interrupted_save_keeps_latest_resumable(self, small_cfg, tmp_path, monkeypatch):
+        """A crash mid-save must leave 'latest' naming a COMPLETE checkpoint:
+        the host sidecar is written first, the latest pointer last."""
+        import repro.run.ckpt as ckpt_mod
+        from repro.checkpoint import latest_step
+        from repro.run.ckpt import save_checkpoint
+
+        ckpt = str(tmp_path / "crash")
+        spec = _spec_for("async", small_cfg, num_steps=3, refresh_every=0)
+        res = run(spec, hooks=[CheckpointHook(ckpt, every=3)])
+        assert latest_step(ckpt) == 3
+
+        def crashing_save_train_state(directory, state, step):
+            raise RuntimeError("simulated crash mid-save")
+
+        monkeypatch.setattr(ckpt_mod, "save_train_state", crashing_save_train_state)
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            save_checkpoint(ckpt, res.state, spec.pipeline, 4)
+        # the pointer still names the last complete checkpoint, and resuming
+        # from it works
+        assert latest_step(ckpt) == 3
+        monkeypatch.undo()
+        spec2 = _spec_for("async", small_cfg, num_steps=3, refresh_every=0)
+        res2 = run(spec2, resume_from=ckpt)
+        _assert_trees_equal(res.state, res2.state)
+
+    def test_resume_at_num_steps_is_noop(self, small_cfg, tmp_path):
+        ckpt = str(tmp_path / "noop")
+        spec = _spec_for("sync", small_cfg, num_steps=3)
+        res = run(spec, hooks=[CheckpointHook(ckpt, every=3)])
+        spec2 = _spec_for("sync", small_cfg, num_steps=3)
+        res2 = run(spec2, resume_from=ckpt)
+        assert res2.start_step == res2.step == 3
+        _assert_trees_equal(res.state, res2.state)
+
+
+class TestTrainLoopShim:
+    def test_shim_trajectory_matches_direct_run(self, small_cfg):
+        """train_loop survives only as a shim: its trajectory (history rows
+        and final state) is bit-identical to driving run() directly."""
+        sched = _sched()
+
+        def build():
+            link = T.scale_by_staleness(sched, LR, m=4, tau_max=TAU_MAX)
+            pipe = T.chain(link, T.scale(-LR))
+            adapt = make_adapt(sched, Poisson(3.0), cdf_support=RING, tau_max=TAU_MAX)
+            return pipe, adapt
+
+        pipe_a, adapt_a = build()
+        spec = RunSpec(
+            cfg=small_cfg, pipeline=pipe_a, mode="async", num_steps=6,
+            batch_size=2, seq_len=16, num_workers=4, ring=RING, adapt=adapt_a,
+            refresh_every=3, seed=0,
+        )
+        res = run(spec, hooks=[LogHook(log_every=3, logger=lambda s: None)])
+
+        pipe_b, adapt_b = build()
+        state = init_train_state(
+            jax.random.PRNGKey(0), small_cfg, pipe_b, async_ring=RING, adapt=adapt_b
+        )
+        step = make_step(small_cfg, pipe_b, mode="async", num_workers=4)
+        state, history = train_loop(
+            step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
+            num_steps=6, log_every=3, logger=lambda s: None,
+            pipeline=pipe_b, refresh_every=3,
+        )
+
+        assert [h["loss"] for h in history] == [h["loss"] for h in res.history]
+        assert [h["step"] for h in history] == [h["step"] for h in res.history]
+        _assert_trees_equal(res.state.params, state.params)
+        _assert_trees_equal(res.state.opt_state, state.opt_state)
+
+    def test_shim_checkpoint_fn(self, small_cfg):
+        pipeline = T.chain(T.scale(-LR))
+        state = init_train_state(jax.random.PRNGKey(0), small_cfg, pipeline)
+        step = make_step(small_cfg, pipeline, mode="sync")
+        seen = []
+        train_loop(
+            step, state, lm_batches(small_cfg.vocab_size, 2, 16, seed=0),
+            num_steps=4, log_every=4, logger=lambda s: None,
+            checkpoint_fn=lambda st, i: seen.append(i), checkpoint_every=2,
+        )
+        assert seen == [2, 4]
+
+
+class TestHooks:
+    def test_loghook_rows(self, small_cfg):
+        spec = _spec_for("sync", small_cfg, num_steps=5)
+        lines = []
+        res = run(spec, hooks=[LogHook(log_every=2, logger=lines.append)])
+        # rows at 2, 4 and the final step 5
+        assert [h["step"] for h in res.history] == [2, 4, 5]
+        assert all("loss" in h and "wall_s" in h for h in res.history)
+        assert len(lines) == 3 and lines[0].startswith("step ")
+
+    def test_evalhook_cadence(self, small_cfg):
+        calls = []
+
+        def eval_fn(state):
+            calls.append(1)
+            return {"param_norm": T.global_norm(state.params)}
+
+        spec = _spec_for("sync", small_cfg, num_steps=5)
+        hook = EvalHook(eval_fn, every=2)
+        res = run(spec, hooks=[LogHook(log_every=5, logger=lambda s: None), hook])
+        assert [r["step"] for r in hook.records] == [2, 4, 5]
+        assert all("eval/param_norm" in r for r in hook.records)
+        assert res.records["eval"] is hook.records
+        # eval rows must never pollute the training history shape
+        assert "loss" in res.history[-1]
+
+    def test_benchhook_rows_and_retrace_gate(self, small_cfg, workers_mesh):
+        from repro.bench_schema import config_hash, validate_rows
+
+        spec = _spec_for("sharded_async", small_cfg, num_steps=4, mesh=workers_mesh)
+        config = {"cell": "unit-test"}
+        hook = BenchHook("unit/cell", config)
+        run(spec, hooks=[hook])
+        validate_rows(hook.rows)
+        names = [r["name"] for r in hook.rows]
+        assert names == ["unit/cell/final_loss", "unit/cell/wall_s", "unit/cell/retraces"]
+        assert all(r["config"] == config_hash(config) for r in hook.rows)
+        retraces = hook.rows[2]
+        assert retraces["value"] == 1, "tables must stay step inputs (no retrace)"
+        assert retraces["meta"]["gate"] == "lower"
+        series = hook.rows[0]["meta"]
+        assert len(series["losses"]) == 4 and series["updates"] == [1, 2, 3, 4]
+
+    def test_checkpointhook_at_end(self, small_cfg, tmp_path):
+        ckpt = str(tmp_path / "end")
+        spec = _spec_for("sync", small_cfg, num_steps=5)
+        hook = CheckpointHook(ckpt, every=2, at_end=True)
+        run(spec, hooks=[hook])
+        assert hook.saved_steps == [2, 4, 5]
+        from repro.checkpoint import latest_step
+
+        assert latest_step(ckpt) == 5
