@@ -4,7 +4,8 @@ True lock-free asynchrony does not exist inside one XLA program (lock-step
 collectives).  What the paper's math actually depends on is only the
 *staleness distribution* of applied gradients (Lemma 1 onward) — so on the
 mesh we realize asynchrony as **delayed gradient application**: a ring buffer
-holds the last ``K`` gradient pytrees (sharded like the parameters, bf16);
+holds the last ``K`` gradient pytrees (sharded like the parameters; f32 for
+all-f32 trees, bf16-compressed otherwise — see :func:`ring_dtype_for`);
 each step pushes the fresh gradient and applies one delayed by ``tau``
 sampled from the fitted CMP/Poisson staleness model.  The update is then
 
@@ -34,6 +35,7 @@ __all__ = [
     "init_worker_ring",
     "init_flat_worker_ring",
     "flat_size",
+    "ring_dtype_for",
     "sample_tau",
     "delayed_apply",
     "delayed_apply_batch",
@@ -56,7 +58,21 @@ class DelayedGradients:
     step: jnp.ndarray
 
 
-def init_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradients:
+def ring_dtype_for(params: Any, dtype=None):
+    """Resolve the ring storage dtype: an explicit ``dtype`` wins; otherwise
+    all-f32 trees get f32 rings (slot pushes and pops are then pure copies —
+    the bf16 compression forced a software cast per element in the CPU combine
+    hot loop) and mixed/low-precision trees keep the bf16 compression."""
+    if dtype is not None:
+        return dtype
+    leaves = jax.tree.leaves(params)
+    if leaves and all(l.dtype == jnp.float32 for l in leaves):
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def init_delayed(params: Any, K: int, dtype=None) -> DelayedGradients:
+    dtype = ring_dtype_for(params, dtype)
     ring = jax.tree.map(lambda p: jnp.zeros((K,) + p.shape, dtype), params)
     return DelayedGradients(ring=ring, step=jnp.zeros((), jnp.int32))
 
@@ -66,7 +82,7 @@ def flat_size(params: Any) -> int:
     return sum(int(np.prod(p.shape)) if p.shape else 1 for p in jax.tree.leaves(params))
 
 
-def init_flat_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradients:
+def init_flat_delayed(params: Any, K: int, dtype=None) -> DelayedGradients:
     """Flat-RESIDENT ring: ONE ``(K, N)`` buffer for the whole gradient pytree.
 
     The fused execution path (``make_step(..., fuse=True)``) keeps gradients
@@ -78,6 +94,7 @@ def init_flat_delayed(params: Any, K: int, dtype=jnp.bfloat16) -> DelayedGradien
     same code path — which is what makes the fused/unfused bit-parity hold:
     identical pushes, gathers and contractions, merely de-fragmented.
     """
+    dtype = ring_dtype_for(params, dtype)
     ring = jnp.zeros((K, flat_size(params)), dtype)
     return DelayedGradients(ring=ring, step=jnp.zeros((), jnp.int32))
 
@@ -171,12 +188,13 @@ class WorkerRing:
     step: jnp.ndarray
 
 
-def init_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> WorkerRing:
+def init_worker_ring(params: Any, K: int, W: int, dtype=None) -> WorkerRing:
+    dtype = ring_dtype_for(params, dtype)
     ring = jax.tree.map(lambda p: jnp.zeros((W, K) + p.shape, dtype), params)
     return WorkerRing(ring=ring, step=jnp.zeros((), jnp.int32))
 
 
-def init_flat_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> WorkerRing:
+def init_flat_worker_ring(params: Any, K: int, W: int, dtype=None) -> WorkerRing:
     """Per-worker rings as ONE ``(W, K, N)`` buffer (see :func:`init_flat_delayed`).
 
     The leading worker axis shards over the ``workers`` mesh axis exactly like
@@ -184,6 +202,7 @@ def init_flat_worker_ring(params: Any, K: int, W: int, dtype=jnp.bfloat16) -> Wo
     count); ``worker_ring_combine`` treats the bare array as a single-leaf
     pytree, so the sharded fused step reuses the proven combine unchanged.
     """
+    dtype = ring_dtype_for(params, dtype)
     ring = jnp.zeros((W, K, flat_size(params)), dtype)
     return WorkerRing(ring=ring, step=jnp.zeros((), jnp.int32))
 

@@ -29,9 +29,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.adaptive_update.kernel import BLOCK_ROWS, LANES
-from repro.kernels.adaptive_update.ref import fused_chain_ref
+from repro.kernels.adaptive_update.ref import fused_chain_ref, fused_tick_ref
 
-__all__ = ["fused_chain_call", "fused_chain_flat", "SCALAR_ORDER"]
+__all__ = [
+    "fused_chain_call",
+    "fused_chain_flat",
+    "fused_tick_call",
+    "fused_tick_flat",
+    "fused_combine_call",
+    "fused_combine_flat",
+    "SCALAR_ORDER",
+]
 
 _TILE = BLOCK_ROWS * LANES
 
@@ -189,3 +197,243 @@ def fused_chain_flat(
         p_new, new_bufs = fused_chain_call(kind, p, g, kernel_bufs, scalars, interpret=interpret)
         return p_new, (bufs if kind == "sgd" else new_bufs[0])
     return fused_chain_ref(kind, p, g, bufs, scalars)
+
+
+# ---------------------------------------------------------------------------
+# One-launch async tick: ring push + weighted combine fused into the chain
+# ---------------------------------------------------------------------------
+#
+# The tick kernels take the whole flat-resident delayed ring as a (K, rows,
+# LANES) operand tiled over the SAME row grid as p/g/state: each grid step
+# owns a (K, BLOCK_ROWS, LANES) ring block, pushes the fresh gradient into
+# slot t%K via a one-hot select, contracts the K slots against the slot-folded
+# combine weights, and feeds the result straight into the chain body — params,
+# ring slot and optimizer state are all written in the same pass, so the whole
+# server tick is ONE launch (the clip variant keeps its separate combine
+# launch: the norm is a reduction between combine and apply by nature).
+#
+# Slot folding: the per-worker weights w[w] land on ring slots as
+# ``w_slot[k] = sum_{w: slot(tau_w)=k} w[w] * live[w]`` — workers sharing a
+# slot fold BEFORE the multiply, whereas the unfused tensordot sums after.
+# Same value to f32 round-off, not bitwise; the production CPU/GPU path
+# therefore runs ``fused_tick_ref`` (exact composition of the unfused ops)
+# and the Pallas tick is tolerance-tested under the ``pallas`` mark.
+
+
+def _tick_combine(push_ref, wsl_ref, g_ref, r_ref, r_out_ref):
+    """Push the fresh gradient into the ring block and combine the K slots."""
+    g = g_ref[...]  # (BLOCK_ROWS, LANES), already in ring dtype
+    r = r_ref[...]  # (K, BLOCK_ROWS, LANES)
+    oh = push_ref[...][:, :, None]  # (K, 1, 1)
+    r_new = jnp.where(oh > 0, g[None, :, :], r)
+    r_out_ref[...] = r_new
+    w = wsl_ref[...][:, :, None]  # (K, 1, 1) slot-folded weights
+    return jnp.sum(w * r_new.astype(jnp.float32), axis=0)
+
+
+def _sgd_tick_kernel(
+    fs_ref, fk_ref, fc_ref, ms_ref, push_ref, wsl_ref, p_ref, g_ref, r_ref,
+    p_out_ref, r_out_ref,
+):
+    u = _tick_combine(push_ref, wsl_ref, g_ref, r_ref, r_out_ref)
+    u = _prefix(u, fs_ref, fk_ref, fc_ref)
+    u = ms_ref[0, 0] * u
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + u).astype(p_out_ref.dtype)
+
+
+def _momentum_tick_kernel(
+    fs_ref, fk_ref, fc_ref, ms_ref, mu_ref, push_ref, wsl_ref, p_ref, g_ref,
+    r_ref, v_ref, p_out_ref, r_out_ref, v_out_ref,
+):
+    u = _tick_combine(push_ref, wsl_ref, g_ref, r_ref, r_out_ref)
+    u = _prefix(u, fs_ref, fk_ref, fc_ref)
+    u = ms_ref[0, 0] * u
+    v_new = mu_ref[0, 0] * v_ref[...].astype(jnp.float32) + u
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + v_new).astype(p_out_ref.dtype)
+
+
+def _adam_tick_kernel(
+    fs_ref, fk_ref, fc_ref, ms_ref, b1_ref, omb1_ref, b2_ref, omb2_ref,
+    eps_ref, c1_ref, c2_ref, push_ref, wsl_ref, p_ref, g_ref, r_ref, m_ref,
+    v_ref, p_out_ref, r_out_ref, m_out_ref, v_out_ref,
+):
+    u = _tick_combine(push_ref, wsl_ref, g_ref, r_ref, r_out_ref)
+    u = _prefix(u, fs_ref, fk_ref, fc_ref)
+    m_new = b1_ref[0, 0] * m_ref[...].astype(jnp.float32) + omb1_ref[0, 0] * u
+    v_new = b2_ref[0, 0] * v_ref[...].astype(jnp.float32) + omb2_ref[0, 0] * jnp.square(u)
+    out = (m_new * c1_ref[0, 0]) / (jnp.sqrt(v_new * c2_ref[0, 0]) + eps_ref[0, 0])
+    u2 = ms_ref[0, 0] * out
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    p_out_ref[...] = (p_ref[...].astype(jnp.float32) + u2).astype(p_out_ref.dtype)
+
+
+_TICK_KERNELS = {
+    "sgd": (_sgd_tick_kernel, 0),
+    "momentum": (_momentum_tick_kernel, 1),
+    "adam": (_adam_tick_kernel, 2),
+}
+
+
+def _ring_to_tiles(ring: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    K, n = ring.shape
+    pad = (-n) % _TILE
+    if pad:
+        ring = jnp.pad(ring, ((0, 0), (0, pad)))
+    return ring.reshape(K, -1, LANES), n
+
+
+def _slot_weights(K: int, step, taus, weights):
+    """Trace the push one-hot, the slot-folded combine weights and the drop
+    mask for one tick — (K, 1) operand shapes, matching the scalar tiles."""
+    slot = jnp.mod(step, K)
+    src_step = step - taus
+    src_slot = jnp.mod(src_step, K)
+    live = ((src_step >= 0) & (taus < K)).astype(jnp.float32)
+    w = jnp.asarray(weights, jnp.float32) * live
+    push = jax.nn.one_hot(slot, K, dtype=jnp.float32).reshape(K, 1)
+    w_slot = jnp.zeros((K,), jnp.float32).at[src_slot].add(w).reshape(K, 1)
+    return push, w_slot, live
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def fused_tick_call(kind: str, p, g, bufs, scalars, ring, push, w_slot, *, interpret: bool = True):
+    """One Pallas launch for a whole async tick on flat 1-D buffers.
+
+    ``ring`` is the flat ``(K, N)`` delayed ring; ``push`` / ``w_slot`` the
+    ``(K, 1)`` one-hot push selector and slot-folded combine weights from
+    :func:`_slot_weights`.  Returns ``(p_new, new_bufs, new_ring)``.
+    """
+    kernel, n_bufs = _TICK_KERNELS[kind]
+    bufs = tuple(bufs)
+    assert len(bufs) == n_bufs, f"{kind} expects {n_bufs} state buffers, got {len(bufs)}"
+    p2d, n = _to_tiles(p)
+    g2d, _ = _to_tiles(g.astype(ring.dtype))  # push stores the ring-dtype cast
+    ring3d, _ = _ring_to_tiles(ring)
+    buf2d = [_to_tiles(b)[0] for b in bufs]
+    K = ring.shape[0]
+    R = p2d.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kvec_spec = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    ring_tile = pl.BlockSpec((K, BLOCK_ROWS, LANES), lambda i: (0, i, 0))
+    svals = [jnp.asarray(scalars[k], jnp.float32).reshape(1, 1) for k in SCALAR_ORDER[kind]]
+    out2d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scalar_spec] * len(svals)
+        + [kvec_spec, kvec_spec]
+        + [tile, tile, ring_tile]
+        + [tile] * n_bufs,
+        out_specs=[tile, ring_tile] + [tile] * n_bufs,
+        out_shape=[
+            jax.ShapeDtypeStruct(p2d.shape, p2d.dtype),
+            jax.ShapeDtypeStruct(ring3d.shape, ring3d.dtype),
+        ]
+        + [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in buf2d],
+        interpret=interpret,
+    )(*svals, push, w_slot, p2d, g2d, ring3d, *buf2d)
+    p_new = out2d[0].reshape(-1)[:n].reshape(p.shape)
+    new_ring = out2d[1].reshape(K, -1)[:, : ring.shape[1]]
+    new_bufs = tuple(o.reshape(-1)[:n].reshape(b.shape) for o, b in zip(out2d[2:], bufs))
+    return p_new, new_bufs, new_ring
+
+
+def _combine_kernel(push_ref, wsl_ref, g_ref, r_ref, g_out_ref, r_out_ref):
+    g_out_ref[...] = _tick_combine(push_ref, wsl_ref, g_ref, r_ref, r_out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_combine_call(g, ring, push, w_slot, *, interpret: bool = True):
+    """One Pallas launch for push + weighted combine only: ``(g_eff, new_ring)``.
+
+    The two-launch tick of the clip variant (norm reduction between combine
+    and apply) and of the sharded engine (combine runs per-shard under
+    shard_map, apply on the merged g_eff).
+    """
+    g2d, n = _to_tiles(g.astype(ring.dtype))
+    ring3d, _ = _ring_to_tiles(ring)
+    K = ring.shape[0]
+    R = g2d.shape[0]
+    grid = (R // BLOCK_ROWS,)
+    kvec_spec = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    ring_tile = pl.BlockSpec((K, BLOCK_ROWS, LANES), lambda i: (0, i, 0))
+    g_eff2d, ring_out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[kvec_spec, kvec_spec, tile, ring_tile],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)), ring_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct(g2d.shape, jnp.float32),
+            jax.ShapeDtypeStruct(ring3d.shape, ring3d.dtype),
+        ],
+        interpret=interpret,
+    )(push, w_slot, g2d, ring3d)
+    g_eff = g_eff2d.reshape(-1)[:n]
+    new_ring = ring_out.reshape(K, -1)[:, : ring.shape[1]]
+    return g_eff, new_ring
+
+
+def fused_combine_flat(g, ring, step, taus, weights, *, use_pallas=None, interpret=False):
+    """Production dispatch for the push + combine half-tick on a flat ring.
+
+    Returns ``(g_eff, live, new_ring)``.  The non-Pallas path runs the exact
+    unfused ring ops (``delayed_combine`` on the bare-array ring), keeping the
+    CPU/GPU bit-parity contract.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        push, w_slot, live = _slot_weights(ring.shape[0], step, taus, weights)
+        g_eff, new_ring = fused_combine_call(g, ring, push, w_slot, interpret=interpret)
+        return g_eff, live, new_ring
+    from repro.async_engine.delayed import DelayedGradients, delayed_combine
+
+    g_eff, live, new_state = delayed_combine(
+        DelayedGradients(ring=ring, step=step), g, taus, weights
+    )
+    return g_eff, live, new_state.ring
+
+
+def fused_tick_flat(
+    kind: str,
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    bufs,
+    scalars,
+    ring: jnp.ndarray,
+    step,
+    taus,
+    weights,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Production dispatch for one whole async tick on flat 1-D buffers.
+
+    ``use_pallas=None`` auto-selects the one-launch Pallas tick on TPU and
+    the exact-composition oracle (:func:`~repro.kernels.adaptive_update.ref
+    .fused_tick_ref` — unfused ring ops + chain ref, bit-identical f32)
+    elsewhere.  ``bufs``/returns mirror :func:`fused_chain_flat`, plus the
+    new ring and the per-worker ``live`` mask:
+    ``(p_new, new_bufs, new_ring, live)``.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        push, w_slot, live = _slot_weights(ring.shape[0], step, taus, weights)
+        if kind == "adam":
+            p_new, (m_new, v_new), new_ring = fused_tick_call(
+                kind, p, g, (bufs["m"], bufs["v"]), scalars, ring, push, w_slot,
+                interpret=interpret,
+            )
+            return p_new, {"m": m_new, "v": v_new}, new_ring, live
+        kernel_bufs = () if kind == "sgd" else (bufs,)
+        p_new, new_bufs, new_ring = fused_tick_call(
+            kind, p, g, kernel_bufs, scalars, ring, push, w_slot, interpret=interpret
+        )
+        return p_new, (bufs if kind == "sgd" else new_bufs[0]), new_ring, live
+    return fused_tick_ref(kind, p, g, bufs, scalars, ring, step, taus, weights)

@@ -12,7 +12,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["adaptive_update_ref", "adaptive_update_tree_ref", "fused_chain_ref"]
+__all__ = [
+    "adaptive_update_ref",
+    "adaptive_update_tree_ref",
+    "fused_chain_ref",
+    "fused_tick_ref",
+]
 
 
 def adaptive_update_ref(p, g, v, alpha, mu):
@@ -53,6 +58,28 @@ def fused_chain_ref(kind: str, p, g, bufs, s):
         u2 = s["m_scale"] * out
         return (p.astype(jnp.float32) + u2).astype(p.dtype), {"m": m, "v": v}
     raise ValueError(f"unknown fused-chain kind {kind!r}")
+
+
+def fused_tick_ref(kind: str, p, g, bufs, s, ring, step, taus, weights):
+    """One whole async server tick on flat buffers: the tick-kernel oracle.
+
+    Composes the proven ring ops (:func:`repro.async_engine.delayed
+    .delayed_combine` on the bare ``(K, N)`` ring — a single-leaf pytree) with
+    :func:`fused_chain_ref`, so the tick is bit-identical to the unfused
+    push + gather + tensordot + link-by-link pipeline.  This IS the production
+    CPU/GPU lowering of ``flat_tick_step``; the Pallas tick kernel folds the
+    per-worker weights onto ring slots instead (different float association
+    when workers share a slot) and is tolerance-tested against this.
+
+    Returns ``(p_new, new_bufs, new_ring, live)``.
+    """
+    from repro.async_engine.delayed import DelayedGradients, delayed_combine
+
+    g_eff, live, new_state = delayed_combine(
+        DelayedGradients(ring=ring, step=step), g, taus, weights
+    )
+    p_new, new_bufs = fused_chain_ref(kind, p, g_eff, bufs, s)
+    return p_new, new_bufs, new_state.ring, live
 
 
 def adaptive_update_tree_ref(params, grads, vel, alpha, mu):

@@ -49,6 +49,9 @@ def main():
     ap.add_argument("--async_psgd", action="store_true", help="MindTheStep async step")
     ap.add_argument("--workers", type=int, default=16, help="modeled async workers m")
     ap.add_argument("--ring", type=int, default=16, help="delayed-gradient ring size")
+    ap.add_argument("--ring_dtype", default=None, choices=["float32", "bfloat16"],
+                    help="delayed-ring storage dtype (default: the params "
+                         "dtype for all-f32 trees, bf16-compressed otherwise)")
     ap.add_argument("--refresh_every", type=int, default=0, help="online refit cadence")
     ap.add_argument("--fused", action="store_true",
                     help="fused flat-buffer momentum apply (Pallas on TPU)")
@@ -120,6 +123,13 @@ def main():
         seq_len=args.seq,
         num_workers=args.workers,
         ring=args.ring if args.async_psgd else 0,
+        ring_dtype=(
+            None
+            if args.ring_dtype is None
+            else {"float32": jax.numpy.float32, "bfloat16": jax.numpy.bfloat16}[
+                args.ring_dtype
+            ]
+        ),
         adapt=adapt,
         fuse=args.fuse,
         refresh_every=args.refresh_every,

@@ -52,7 +52,13 @@ import jax.numpy as jnp
 from repro.async_engine.delayed import flat_size
 from repro.optim import transform as T
 
-__all__ = ["FusionPlan", "plan_fusion", "fuse_pipeline", "flat_chain_step"]
+__all__ = [
+    "FusionPlan",
+    "plan_fusion",
+    "fuse_pipeline",
+    "flat_chain_step",
+    "flat_tick_step",
+]
 
 # Link kinds the async engines absorb into the combine weights / the sync
 # mode folds into the per-step scalar prefix.
@@ -146,19 +152,17 @@ def _prefix_scalars(plan: FusionPlan, ctx: T.StepContext):
     return f_stale, f_keep
 
 
-def flat_chain_step(plan: FusionPlan, g_flat, bufs, p_flat, ctx=None):
-    """The flat-resident fused step: ``(new_p_flat, new_bufs)`` in ONE launch.
+def _family_scalars(plan: FusionPlan, g_flat, bufs, ctx: T.StepContext):
+    """The full scalar bundle for one fused step on ``g_flat``, plus the
+    kernel's view of the family state: ``(scalars, kernel_bufs, rewrap)``.
 
-    This is the kernel-level entry the fused pipeline (and the benchmark's
-    flat-resident rows) run — no pytree pack/unpack.  ``bufs`` is the fused
-    state (``()`` / velocity / ``{"m","v","t"}``); the clip norm, when
-    present, is the one extra (unavoidable) data pass, reduced over the flat
-    buffer.
+    ``kernel_bufs`` is what the kernel dispatchers take (``()`` for sgd, the
+    bare velocity for momentum, ``{"m","v"}`` for adam — the step counter
+    stays out here) and ``rewrap`` maps the kernel's returned state back to
+    the pipeline form (re-attaching adam's incremented ``t``).  The clip
+    norm, when present, is the one extra (unavoidable) data pass over
+    ``g_flat``.
     """
-    from repro.kernels.adaptive_update.fused import fused_chain_flat
-
-    ctx = T.StepContext() if ctx is None else ctx
-    g_flat = g_flat.astype(jnp.float32)
     f_stale, f_keep = _prefix_scalars(plan, ctx)
     f_clip = jnp.float32(1.0)
     if plan.clip is not None:
@@ -173,8 +177,7 @@ def flat_chain_step(plan: FusionPlan, g_flat, bufs, p_flat, ctx=None):
     }
     if plan.kind == "momentum":
         scalars["mu"] = jnp.float32(plan.mu)
-        p_new, v_new = fused_chain_flat(plan.kind, p_flat, g_flat, bufs, scalars)
-        return p_new, v_new
+        return scalars, bufs, lambda v_new: v_new
     if plan.kind == "adam":
         t = bufs["t"] + 1
         tf = t.astype(jnp.float32)
@@ -189,12 +192,83 @@ def flat_chain_step(plan: FusionPlan, g_flat, bufs, p_flat, ctx=None):
             c1=1.0 / (1.0 - plan.b1**tf),
             c2=1.0 / (1.0 - plan.b2**tf),
         )
-        p_new, mv = fused_chain_flat(
-            plan.kind, p_flat, g_flat, {"m": bufs["m"], "v": bufs["v"]}, scalars
+        return (
+            scalars,
+            {"m": bufs["m"], "v": bufs["v"]},
+            lambda mv: {"m": mv["m"], "v": mv["v"], "t": t},
         )
-        return p_new, {"m": mv["m"], "v": mv["v"], "t": t}
-    p_new, _ = fused_chain_flat(plan.kind, p_flat, g_flat, (), scalars)
-    return p_new, bufs
+    return scalars, (), lambda _new: bufs
+
+
+def flat_chain_step(plan: FusionPlan, g_flat, bufs, p_flat, ctx=None):
+    """The flat-resident fused step: ``(new_p_flat, new_bufs)`` in ONE launch.
+
+    This is the kernel-level entry the fused pipeline (and the benchmark's
+    flat-resident rows) run — no pytree pack/unpack.  ``bufs`` is the fused
+    state (``()`` / velocity / ``{"m","v","t"}``).
+    """
+    from repro.kernels.adaptive_update.fused import fused_chain_flat
+
+    ctx = T.StepContext() if ctx is None else ctx
+    g_flat = g_flat.astype(jnp.float32)
+    scalars, kernel_bufs, rewrap = _family_scalars(plan, g_flat, bufs, ctx)
+    p_new, new_bufs = fused_chain_flat(plan.kind, p_flat, g_flat, kernel_bufs, scalars)
+    return p_new, rewrap(new_bufs)
+
+
+def flat_tick_step(
+    plan: FusionPlan,
+    delayed,
+    g_flat,
+    taus,
+    weights,
+    bufs,
+    p_flat,
+    ctx=None,
+    *,
+    use_pallas: bool | None = None,
+):
+    """One whole async server tick, flat-resident: ring push + alpha-weighted
+    combine + staleness/drop/clip scalars + body + apply.
+
+    ``delayed`` is the flat-ring :class:`~repro.async_engine.delayed
+    .DelayedGradients`; ``weights`` the per-worker combine weights (alpha /
+    drop already folded in by the step builder).  Returns ``(new_p_flat,
+    new_bufs, new_delayed, live)``.
+
+    Lowering: on TPU a clip-less chain is ONE ``fused_tick`` launch (push,
+    slot-folded combine, body and apply in a single pass over the ring and
+    param tiles); the clip variant is the documented 2-launch tick — a
+    combine launch, the norm reduction, the chain launch.  On CPU/GPU the
+    tick composes the exact unfused ops (``delayed_combine`` +
+    :func:`flat_chain_step`), which is what makes the fused tick
+    bit-identical (f32) to the unfused trajectory there.
+    """
+    from repro.async_engine.delayed import DelayedGradients, delayed_combine
+    from repro.kernels.adaptive_update.fused import fused_combine_flat, fused_tick_flat
+
+    ctx = T.StepContext() if ctx is None else ctx
+    g_flat = g_flat.astype(jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        g_eff, live, new_state = delayed_combine(delayed, g_flat, taus, weights)
+        p_new, new_bufs = flat_chain_step(plan, g_eff, bufs, p_flat, ctx)
+        return p_new, new_bufs, new_state, live
+    if plan.clip is not None:
+        g_eff, live, new_ring = fused_combine_flat(
+            g_flat, delayed.ring, delayed.step, taus, weights, use_pallas=True
+        )
+        p_new, new_bufs = flat_chain_step(plan, g_eff, bufs, p_flat, ctx)
+        new_state = DelayedGradients(ring=new_ring, step=delayed.step + 1)
+        return p_new, new_bufs, new_state, live
+    scalars, kernel_bufs, rewrap = _family_scalars(plan, g_flat, bufs, ctx)
+    p_new, new_bufs, new_ring, live = fused_tick_flat(
+        plan.kind, p_flat, g_flat, kernel_bufs, scalars,
+        delayed.ring, delayed.step, taus, weights, use_pallas=True,
+    )
+    new_state = DelayedGradients(ring=new_ring, step=delayed.step + 1)
+    return p_new, rewrap(new_bufs), new_state, live
 
 
 def fuse_pipeline(pipeline) -> T.Chain | None:
@@ -237,6 +311,12 @@ def fuse_pipeline(pipeline) -> T.Chain | None:
         return ()
 
     def init(params):
+        if isinstance(params, jax.Array) and params.ndim == 1:
+            # flat-NATIVE params (the TrainState param buffer IS the packed
+            # view, see make_step): keep no resident copy here — a second
+            # buffer would alias the params under donation and drift on any
+            # out-of-step param edit.
+            return {"p": None, "bufs": _family_bufs(params.shape[0])}
         all_f32 = all(l.dtype == jnp.float32 for l in jax.tree.leaves(params))
         return {
             "p": T.pack_flat(params) if all_f32 else None,

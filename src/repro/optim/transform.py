@@ -104,6 +104,7 @@ __all__ = [
     "global_norm",
     "pack_flat",
     "unpack_flat",
+    "flat_view",
     "apply_updates",
     "run_pipeline",
     "staleness_link",
@@ -255,6 +256,33 @@ def unpack_flat(flat: jnp.ndarray, like: Params) -> Params:
     # unravel type-checks its input against the ravel dtype of `like` (e.g.
     # bf16 params); the cast is the same per-leaf down-cast unravel applies.
     return unravel(flat.astype(canonical.dtype))
+
+
+def flat_view(flat: jnp.ndarray, template: Params) -> Params:
+    """Reshape a packed ``(N,)`` buffer into the leaf shapes of ``template``.
+
+    Like :func:`unpack_flat`, but ``template`` may hold shape/dtype structs
+    (``jax.eval_shape`` output) instead of concrete arrays — nothing about the
+    template is materialized.  Slices follow ``jax.tree.leaves`` order, the
+    same order ``ravel_pytree``/:func:`pack_flat` use, so
+    ``flat_view(pack_flat(t), t)`` reproduces ``t``.
+
+    This is the model-boundary view of flat-native training: params stay
+    packed across steps and are viewed leaf-wise only inside the loss closure.
+    Because the VJP of slice+reshape is concat+ravel, differentiating through
+    the view yields the packed gradient directly — gradients are *born flat*,
+    no per-step :func:`pack_flat` call.
+    """
+    leaves, treedef = jax.tree.flatten(template)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        out.append(flat[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    assert off == flat.shape[0], (
+        f"flat buffer has {flat.shape[0]} elements, template needs {off}"
+    )
+    return jax.tree.unflatten(treedef, out)
 
 
 def apply_updates(params: Params, updates: Updates) -> Params:

@@ -75,7 +75,11 @@ def _refresher_of(pipeline):
 
 
 class _EngineBase:
-    """Shared plumbing: trace counting, jit, and the refresh boundary."""
+    """Shared plumbing: trace counting, jit, donation, the refresh boundary."""
+
+    # Spec-built engines donate the state into the fused tick (flat-resident
+    # buffers update in place); PrebuiltEngine keeps the caller's contract.
+    _donate_state = True
 
     def __init__(self, spec: RunSpec):
         self.spec = spec
@@ -95,7 +99,25 @@ class _EngineBase:
             self._traces.append(1)  # runs only when jax (re)traces
             return base(state, batch)
 
+        if self._donate_state and self.spec.fuse:
+            # Fused layouts rewrite params / rings / flat optimizer state
+            # wholesale each tick: donating the state lets XLA alias those
+            # buffers tick-over-tick instead of copying the (K, N) /
+            # (W, K, N) ring every step.  ``_own`` below hands the loop an
+            # owned state, so donation never deletes spec-held arrays.
+            return jax.jit(counting, donate_argnums=(0,))
         return jax.jit(counting)
+
+    def _own(self, state):
+        """Copy the built state when ticks will donate it: a donated buffer
+        is deleted after the call, and the built state shares arrays with the
+        spec (``spec.params``, ``spec.adapt``) that must survive this run —
+        and the next run built from the same spec."""
+        if self._donate_state and self.spec.fuse:
+            import jax.numpy as jnp
+
+            return jax.tree.map(jnp.copy, state)
+        return state
 
     def tick(self, state, batch):
         if self._tick is None:
@@ -139,13 +161,15 @@ class SyncEngine(_EngineBase):
         from repro.training.steps import init_train_state
 
         spec = self.spec
-        return init_train_state(
-            jax.random.PRNGKey(spec.seed),
-            spec.cfg,
-            spec.pipeline,
-            adapt=spec.adapt,
-            params=spec.params,
-            fuse=spec.fuse,
+        return self._own(
+            init_train_state(
+                jax.random.PRNGKey(spec.seed),
+                spec.cfg,
+                spec.pipeline,
+                adapt=spec.adapt,
+                params=spec.params,
+                fuse=spec.fuse,
+            )
         )
 
     def _make_step(self):
@@ -167,14 +191,17 @@ class AsyncEngine(_EngineBase):
         from repro.training.steps import init_train_state
 
         spec = self.spec
-        return init_train_state(
-            jax.random.PRNGKey(spec.seed),
-            spec.cfg,
-            spec.pipeline,
-            async_ring=spec.ring,
-            adapt=spec.adapt,
-            params=spec.params,
-            fuse=spec.fuse,
+        return self._own(
+            init_train_state(
+                jax.random.PRNGKey(spec.seed),
+                spec.cfg,
+                spec.pipeline,
+                async_ring=spec.ring,
+                adapt=spec.adapt,
+                params=spec.params,
+                fuse=spec.fuse,
+                ring_dtype=spec.ring_dtype,
+            )
         )
 
     def _make_step(self):
@@ -210,15 +237,18 @@ class ShardedAsyncEngine(_EngineBase):
         from repro.training.steps import init_sharded_async_state
 
         spec = self.spec
-        return init_sharded_async_state(
-            jax.random.PRNGKey(spec.seed),
-            spec.cfg,
-            spec.pipeline,
-            ring=spec.ring,
-            adapt=spec.adapt,
-            params=spec.params,
-            mesh=self.mesh,
-            fuse=spec.fuse,
+        return self._own(
+            init_sharded_async_state(
+                jax.random.PRNGKey(spec.seed),
+                spec.cfg,
+                spec.pipeline,
+                ring=spec.ring,
+                adapt=spec.adapt,
+                params=spec.params,
+                mesh=self.mesh,
+                fuse=spec.fuse,
+                ring_dtype=spec.ring_dtype,
+            )
         )
 
     def _make_step(self):
@@ -241,8 +271,11 @@ class PrebuiltEngine(_EngineBase):
 
     ``step_fn`` is jitted here unless it already is (``.lower`` duck check —
     the historical ``train_loop`` contract); a pre-compiled step cannot be
-    trace-counted, so ``retraces`` is None in that case.
+    trace-counted, so ``retraces`` is None in that case.  No state donation:
+    the caller owns the state and may reuse it after the run.
     """
+
+    _donate_state = False
 
     def __init__(
         self,

@@ -55,6 +55,8 @@ class RunSpec:
     # -- engine knobs --------------------------------------------------------
     num_workers: int = 1
     ring: int = 0
+    ring_dtype: Any = None  # delayed-ring storage dtype (None: params dtype
+    # for all-f32 trees, bf16 otherwise — see delayed.ring_dtype_for)
     adapt: Any = None
     mesh: Any = None
     axis_name: str = "workers"

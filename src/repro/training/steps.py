@@ -31,9 +31,12 @@ trajectories are bit-identical either way.
 ``fuse=True`` switches every mode to the FUSED execution model
 (:mod:`repro.optim.fuse`): the whole pipeline lowers to one Pallas
 flat-buffer kernel per step, the delayed rings live flat-resident (one
-``(K, N)`` / ``(W, K, N)`` buffer instead of one ring per leaf), and the
-trajectory stays bit-identical (f32) to the link-by-link execution.
-Unfuseable chains fall back with a single warning.
+``(K, N)`` / ``(W, K, N)`` buffer instead of one ring per leaf), all-f32
+params go flat-NATIVE (the param buffer is the packed ``(N,)`` view;
+gradients come out of autodiff already packed, so the per-step pack →
+combine → unpack round-trip disappears) and the whole async tick is one
+``flat_tick_step`` launch.  The trajectory stays bit-identical (f32) to the
+link-by-link execution.  Unfuseable chains fall back with a single warning.
 
 ``make_serve_step`` — one decode step against a KV cache (inference shapes
 ``decode_32k`` / ``long_500k``).
@@ -77,6 +80,7 @@ from repro.training.adapt import (
 __all__ = [
     "TrainState",
     "init_params",
+    "param_view",
     "init_train_state",
     "init_sharded_async_state",
     "make_step",
@@ -113,6 +117,21 @@ def init_params(key: jax.Array, cfg) -> Any:
     return M.init_model(kp, cfg)
 
 
+def param_view(params, cfg) -> Any:
+    """Pytree view of params that may be flat-native (one packed ``(N,)``).
+
+    The model-boundary unpack of fused flat-native training: eval hooks,
+    launchers and tests use this to look at params leaf-wise regardless of
+    the execution layout.  Accepts a :class:`TrainState` or params directly;
+    pytree params pass through untouched.
+    """
+    params = getattr(params, "params", params)
+    if isinstance(params, jax.Array) and params.ndim == 1:
+        template = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        return T.flat_view(params, template)
+    return params
+
+
 def init_train_state(
     key: jax.Array,
     cfg,
@@ -122,6 +141,7 @@ def init_train_state(
     adapt: AdaptState | None = None,
     params: Any | None = None,
     fuse: bool = False,
+    ring_dtype: Any = None,
 ) -> TrainState:
     """``opt`` is either a legacy :class:`Optimizer` or a pipeline
     (:class:`~repro.optim.transform.GradientTransform`) — both expose
@@ -129,9 +149,16 @@ def init_train_state(
 
     ``fuse=True`` initializes the FUSED execution layout for a fuseable
     pipeline (pair it with ``make_step(..., fuse=True)``): flat-resident
-    optimizer state and a flat ``(K, N)`` delayed ring.  An unfuseable
-    pipeline falls back to the standard layout silently — ``make_step`` owns
-    the (single) fallback warning.
+    optimizer state and a flat ``(K, N)`` delayed ring.  All-f32 params
+    additionally go flat-NATIVE — ``TrainState.params`` becomes the packed
+    ``(N,)`` buffer itself (view it leaf-wise with :func:`param_view`), so
+    the per-step pack → combine → unpack round-trip disappears.  An
+    unfuseable pipeline falls back to the standard layout silently —
+    ``make_step`` owns the (single) fallback warning.
+
+    ``ring_dtype`` overrides the delayed-ring storage dtype (default: the
+    params dtype for all-f32 trees, bf16 otherwise — see
+    :func:`repro.async_engine.delayed.ring_dtype_for`).
     """
     _, kr = jax.random.split(key)
     if params is None:
@@ -146,13 +173,19 @@ def init_train_state(
             lambda p: p.astype(pd) if p.dtype == jnp.float32 else p, params
         )
     fused = _fused_form(opt) if fuse else None
+    if fused is not None and all(
+        l.dtype == jnp.float32 for l in jax.tree.leaves(params)
+    ):
+        # flat-NATIVE: the param buffer IS the packed view; the fused state
+        # keeps no second copy ("p": None) so donation never aliases
+        params = T.pack_flat(params)
     init_ring = init_flat_delayed if fused is not None else init_delayed
     return TrainState(
         params=params,
         opt_state=(fused or opt).init(params),
         step=jnp.zeros((), jnp.int32),
         rng=kr,
-        delayed=init_ring(params, async_ring) if async_ring else None,
+        delayed=init_ring(params, async_ring, dtype=ring_dtype) if async_ring else None,
         adapt=adapt,
     )
 
@@ -279,17 +312,23 @@ def make_step(
     ``mesh``/``axis_name`` wire the ``workers`` mesh axis of
     ``mode="sharded_async"``.
 
-    ``fuse=True`` lowers the whole pipeline to ONE Pallas flat-buffer kernel
-    per step (:mod:`repro.optim.fuse`): the delayed rings stay flat-resident
-    (build the state with ``init_train_state(..., fuse=True)`` /
-    ``init_sharded_async_state(..., fuse=True)``), the combine hands the
-    fused kernel a packed ``g_eff``, and the step is bit-identical (f32) to
-    the link-by-link execution.  A chain the compiler cannot classify (e.g. a
-    custom link) falls back to link-by-link execution with a single warning.
+    ``fuse=True`` lowers the whole pipeline to the fused execution model
+    (:mod:`repro.optim.fuse`): the delayed rings stay flat-resident (build
+    the state with ``init_train_state(..., fuse=True)`` /
+    ``init_sharded_async_state(..., fuse=True)``), all-f32 params go
+    flat-NATIVE (packed ``(N,)`` buffer; gradients are born flat through the
+    loss-boundary view), and the async tick runs as ONE
+    :func:`~repro.optim.fuse.flat_tick_step` launch — ring push, weighted
+    combine, scalars, body and apply in a single pass (two launches with
+    clip, and in sharded mode where the combine runs under shard_map).  The
+    step stays bit-identical (f32) to the link-by-link execution.  A chain
+    the compiler cannot classify (e.g. a custom link) falls back to
+    link-by-link execution with a single warning.
     """
     assert mode in MODES, f"mode must be one of {MODES}, got {mode!r}"
     apply_fn, transform = _resolve_pipeline(pipeline)
     fused_flat = False
+    plan = None
     if fuse:
         fused = _fused_form(pipeline)
         if fused is None:
@@ -301,16 +340,39 @@ def make_step(
         else:
             apply_fn, transform = _resolve_pipeline(fused)
             fused_flat = True
+            plan = fused.plan
     alpha_c = _resolve_alpha_c(alpha_c, transform)
     if mode != "sync":
         _check_absorbable_order(transform, mode)
 
     def loss_and_grads(params, batch):
+        if isinstance(params, jax.Array) and params.ndim == 1:
+            # flat-NATIVE params: the model sees the leaf-wise view only
+            # inside the loss; the VJP of the view (slice+reshape) is the
+            # pack, so the gradient comes out of autodiff already packed —
+            # no per-step pack_flat, no per-step param unpack.  (Leaf-wise
+            # grad sharding constraints don't apply to the packed buffer.)
+            template = jax.eval_shape(
+                lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+            )
+
+            def lf_flat(pf):
+                return M.loss_fn(T.flat_view(pf, template), batch, cfg)
+
+            (loss, metrics), g_flat = jax.value_and_grad(lf_flat, has_aux=True)(params)
+            return loss, metrics, g_flat
+
         def lf(p):
             return M.loss_fn(p, batch, cfg)
 
         (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
         return loss, metrics, _constrain_grads(grads, cfg)
+
+    def _flat_grads(grads):
+        """One grad pack max: born-flat gradients pass through untouched."""
+        if isinstance(grads, jax.Array) and grads.ndim == 1:
+            return grads
+        return T.pack_flat(grads)
 
     def _check_ring_layout(ring):
         is_flat = isinstance(ring, jax.Array)
@@ -347,10 +409,6 @@ def make_step(
             )
             _check_ring_layout(state.delayed.ring)
             loss, metrics, grads = loss_and_grads(state.params, batch)
-            if fused_flat:
-                # one pack per step (the fresh gradient); the ring, the
-                # combine and the fused apply all stay flat-resident
-                grads = T.pack_flat(grads)
             rng, sub = jax.random.split(state.rng)
             taus = sample_taus(sub, state.adapt.tau_cdf, W)
             alpha = alpha_lookup(state.adapt, taus)
@@ -358,12 +416,38 @@ def make_step(
             keep = _drop_mask(transform, taus)
             if keep is not None:
                 weights = weights * keep
-            g_eff, live, new_ring = delayed_combine(state.delayed, grads, taus, weights)
             adapt = record_taus(state.adapt, taus)
             ctx = T.StepContext(
                 taus=taus, adapt=adapt, rng=rng, staleness_applied=True
             )
-            new_params, new_opt = apply_fn(g_eff, state.opt_state, state.params, ctx)
+            if fused_flat:
+                # ONE-LAUNCH TICK: ring push + alpha-weighted combine +
+                # scalars + body + apply, all flat-resident (flat_tick_step;
+                # 1 launch on TPU, 2 with clip).  Gradients are born flat
+                # under flat-native params; non-f32 storage packs once here.
+                from repro.optim.fuse import flat_tick_step
+
+                opt = state.opt_state
+                assert isinstance(opt, dict) and set(opt) == {"p", "bufs"}, (
+                    "fused async step got a non-fused opt state — initialize "
+                    "it with init_train_state(..., fuse=True)"
+                )
+                flat_params = isinstance(state.params, jax.Array)
+                if opt["p"] is not None:
+                    p_flat = opt["p"]
+                else:
+                    p_flat = state.params if flat_params else T.pack_flat(state.params)
+                p_new, bufs, new_ring, live = flat_tick_step(
+                    plan, state.delayed, _flat_grads(grads), taus, weights,
+                    opt["bufs"], p_flat, ctx,
+                )
+                new_opt = {"p": p_new if opt["p"] is not None else None, "bufs": bufs}
+                new_params = p_new if flat_params else T.unpack_flat(p_new, state.params)
+            else:
+                g_eff, live, new_ring = delayed_combine(
+                    state.delayed, grads, taus, weights
+                )
+                new_params, new_opt = apply_fn(g_eff, state.opt_state, state.params, ctx)
             new_state = TrainState(
                 params=new_params, opt_state=new_opt, step=state.step + 1,
                 rng=rng, delayed=new_ring, adapt=adapt,
@@ -399,8 +483,9 @@ def make_step(
         loss, metrics, grads = loss_and_grads(state.params, batch)
         if fused_flat:
             # flat-resident: the (W, K, N) ring, the per-worker combine and
-            # the fused apply all run over one packed buffer per shard
-            grads = T.pack_flat(grads)
+            # the fused apply all run over one packed buffer per shard (the
+            # pack is a no-op for born-flat flat-native gradients)
+            grads = _flat_grads(grads)
         rng, sub = jax.random.split(state.rng)
         u = jax.random.uniform(sub, (W,))
 
@@ -503,6 +588,7 @@ def init_sharded_async_state(
     params: Any | None = None,
     mesh=None,
     fuse: bool = False,
+    ring_dtype: Any = None,
 ) -> TrainState:
     """TrainState for the sharded engine: per-worker rings + WorkerAdaptState.
 
@@ -519,7 +605,7 @@ def init_sharded_async_state(
     init_wring = (
         init_flat_worker_ring if fuse and _fused_form(opt) is not None else init_worker_ring
     )
-    wring = init_wring(state.params, ring, adapt.num_workers)
+    wring = init_wring(state.params, ring, adapt.num_workers, dtype=ring_dtype)
     if mesh is not None and "workers" in getattr(mesh, "axis_names", ()):
         from repro.sharding.specs import worker_shardings
 
