@@ -10,6 +10,8 @@ Sections:
   convex_bounds Thm 6 / Cor 3-4  (measured vs analytic bounds)
   kernels       (system)         Pallas kernels + TPU roofline
   roofline      (system)         dry-run roofline table per arch x shape
+  distributed   (system)         LIVE parameter server: updates/sec +
+                                 measured-vs-modeled staleness fit
 
 With ``--json`` every section's wall-clock and pass/fail status lands in
 ``BENCH_smoke.json`` and sections that produce schema rows (kernels) write
@@ -30,6 +32,7 @@ from benchmarks import (
     ablation_momentum,
     convergence,
     convex_bounds,
+    distributed_bench,
     kernels_bench,
     roofline,
     sync_scaling,
@@ -44,6 +47,7 @@ SECTIONS = {
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
     "ablation_momentum": ablation_momentum.main,
+    "distributed": distributed_bench.main,
 }
 
 
@@ -52,7 +56,7 @@ SECTIONS = {
 # dry-run roofline section, exercised by tests/test_dryrun_small.py instead.
 SMOKE_SECTIONS = (
     "tau_models", "convergence", "sync_scaling", "convex_bounds",
-    "ablation_momentum", "kernels",
+    "ablation_momentum", "kernels", "distributed",
 )
 
 

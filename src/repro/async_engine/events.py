@@ -25,10 +25,18 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+import struct
 
 import numpy as np
 
-__all__ = ["EventSimConfig", "simulate_staleness_trace"]
+__all__ = [
+    "EventSimConfig",
+    "simulate_staleness_trace",
+    "TraceError",
+    "TraceWriter",
+    "load_trace",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,3 +118,132 @@ def simulate_staleness_trace(
         heapq.heappush(events, (clock + compute_time(w), tiebreak, w, commits))
         tiebreak += 1
     return (taus, workers) if return_workers else taus
+
+
+# ---------------------------------------------------------------------------
+# Trace file I/O (the on-disk "events.py format")
+# ---------------------------------------------------------------------------
+#
+# Layout (little-endian):
+#
+#   header   8s magic  |  I version  |  I record size        (16 bytes)
+#   records  i tau     |  i worker                           (8 bytes each)
+#
+# A live capture appends to ``path + ".part"`` and flushes every record, so a
+# crash loses at most one torn record; ``finalize()`` atomically renames the
+# part file onto ``path``.  A finalized file is therefore always complete,
+# and a ``.part`` left behind IS the crash marker — ``load_trace`` refuses it
+# unless ``allow_partial=True`` (which salvages the whole records and drops a
+# torn tail), so a truncated capture can never silently skew a refit.
+
+_TRACE_MAGIC = b"REPROTRC"
+_TRACE_VERSION = 1
+_TRACE_HEADER = struct.Struct("<8sII")
+_TRACE_RECORD = struct.Struct("<ii")
+
+
+class TraceError(RuntimeError):
+    """A staleness-trace file is missing, partial, or malformed."""
+
+
+def _read_trace_file(file_path: str, *, allow_partial: bool) -> tuple[np.ndarray, np.ndarray]:
+    with open(file_path, "rb") as f:
+        raw = f.read()
+    if len(raw) < _TRACE_HEADER.size:
+        raise TraceError(f"{file_path}: shorter than the trace header")
+    magic, version, rec_size = _TRACE_HEADER.unpack_from(raw)
+    if magic != _TRACE_MAGIC:
+        raise TraceError(f"{file_path}: not a staleness trace (bad magic {magic!r})")
+    if version != _TRACE_VERSION:
+        raise TraceError(
+            f"{file_path}: trace version {version} unsupported (writer is v{_TRACE_VERSION})"
+        )
+    if rec_size != _TRACE_RECORD.size:
+        raise TraceError(f"{file_path}: record size {rec_size} != {_TRACE_RECORD.size}")
+    body = raw[_TRACE_HEADER.size:]
+    torn = len(body) % rec_size
+    if torn and not allow_partial:
+        raise TraceError(
+            f"{file_path}: {torn} trailing bytes are not a whole record "
+            "(torn write) — pass allow_partial=True to salvage"
+        )
+    flat = np.frombuffer(body[: len(body) - torn], dtype="<i4").reshape(-1, 2)
+    return flat[:, 0].astype(np.int64), flat[:, 1].astype(np.int32)
+
+
+def load_trace(
+    path: str, *, allow_partial: bool = False, return_workers: bool = False
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Load a finalized staleness trace: taus (int64[, workers int32]).
+
+    A missing ``path`` with a leftover ``path + ".part"`` means the capture
+    crashed before :meth:`TraceWriter.finalize`; that partial file is only
+    read under ``allow_partial=True`` (torn trailing bytes are dropped).
+    """
+    part = path + ".part"
+    if os.path.exists(path):
+        taus, workers = _read_trace_file(path, allow_partial=allow_partial)
+    elif os.path.exists(part):
+        if not allow_partial:
+            raise TraceError(
+                f"{path}: capture was never finalized ({part} exists) — "
+                "pass allow_partial=True to salvage the partial trace"
+            )
+        taus, workers = _read_trace_file(part, allow_partial=True)
+    else:
+        raise TraceError(f"{path}: no trace file (and no partial capture)")
+    return (taus, workers) if return_workers else taus
+
+
+class TraceWriter:
+    """Append-safe live staleness-trace capture (see the format note above).
+
+    Records stream to ``path + ".part"`` with a flush per append;
+    ``finalize()`` renames the part file onto ``path`` atomically.  Closing
+    without finalizing (a crash, or :meth:`abort`) leaves the ``.part``
+    behind as a salvageable partial capture.  ``resume=True`` seeds the new
+    part file with the records of an existing finalized trace — or of a
+    leftover partial one — so a resumed run extends the capture instead of
+    clobbering it.
+    """
+
+    def __init__(self, path: str, *, resume: bool = False):
+        self.path = str(path)
+        self._part = self.path + ".part"
+        prior: list[tuple[int, int]] = []
+        if resume:
+            try:
+                taus, workers = load_trace(
+                    self.path, allow_partial=True, return_workers=True
+                )
+                prior = list(zip(taus.tolist(), workers.tolist()))
+            except TraceError:
+                pass  # nothing to extend — start fresh
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(self._part, "wb")
+        self._f.write(_TRACE_HEADER.pack(_TRACE_MAGIC, _TRACE_VERSION, _TRACE_RECORD.size))
+        self.count = 0
+        for tau, worker in prior:
+            self.append(tau, worker)
+
+    def append(self, tau: int, worker: int = 0) -> None:
+        self._f.write(_TRACE_RECORD.pack(int(tau), int(worker)))
+        self._f.flush()
+        self.count += 1
+
+    def finalize(self) -> str:
+        """Flush, fsync, and atomically publish the capture at ``path``."""
+        if self._f.closed:
+            return self.path
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        os.replace(self._part, self.path)
+        return self.path
+
+    def abort(self) -> None:
+        """Close WITHOUT finalizing: the ``.part`` stays as a partial capture."""
+        if not self._f.closed:
+            self._f.close()

@@ -1,0 +1,31 @@
+"""Live parameter-server AsyncPSGD: real concurrency, measured staleness.
+
+Everything else in the repo *simulates* asynchrony (delay rings, sampled
+taus); this package runs it for real — a serial-apply parameter server, W
+live workers over a pluggable transport, and an exact staleness stamp per
+applied gradient, streamed to a replayable trace.  See
+:class:`~repro.distributed.engine.DistributedAsyncEngine` for the Engine
+seam (``RunSpec(mode="distributed")``).
+"""
+
+from repro.distributed.engine import DistributedAsyncEngine
+from repro.distributed.server import ParameterServer
+from repro.distributed.transport import (
+    InProcTransport,
+    InProcWorkerEndpoint,
+    SocketTransport,
+    SocketWorkerEndpoint,
+)
+from repro.distributed.worker import make_grad_fn, socket_worker_main, worker_loop
+
+__all__ = [
+    "DistributedAsyncEngine",
+    "ParameterServer",
+    "InProcTransport",
+    "InProcWorkerEndpoint",
+    "SocketTransport",
+    "SocketWorkerEndpoint",
+    "make_grad_fn",
+    "socket_worker_main",
+    "worker_loop",
+]

@@ -1,0 +1,177 @@
+"""DistributedAsyncEngine: live AsyncPSGD behind the Engine protocol.
+
+The orchestrator sees a normal engine — ``build`` / ``tick`` / ``refresh``
+(plus the optional ``finish`` / ``abort`` lifecycle) — but a tick does no
+compute itself: it submits the batch to a :class:`~repro.distributed.server
+.ParameterServer` owning the state, and ``spec.num_workers`` live workers
+(threads over :class:`InProcTransport`, or spawned processes over
+:class:`SocketTransport`) pull snapshots, compute gradients, and push them
+back with real, measured staleness.
+
+The tick keeps up to ``num_workers - 1`` gradients in flight: tick ``t``
+submits batch ``t`` and waits until at least ``t - (W-1)`` updates have been
+applied.  That is the natural pipelining of a W-worker parameter server —
+every snapshot a worker computes on can be up to W-1 updates stale — while
+still guaranteeing each tick observes at least one fresh applied update (so
+hook metrics are always real).
+
+The cluster starts lazily on the FIRST tick, using that tick's incoming
+state as the server's initial state — which is exactly how ``resume_from``
+restoration flows in: the orchestrator restores the checkpoint into the
+engine-built template, and the server picks up from the restored version
+(the trace capture reopens in resume mode, extending the prior records
+instead of clobbering them).  ``finish`` drains every outstanding gradient,
+stops the workers, and finalizes the trace; ``abort`` (the orchestrator's
+failure path) stops without draining and leaves a salvageable ``.part``
+trace behind.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+from repro.run.engine import _EngineBase
+from repro.run.spec import RunSpec
+
+__all__ = ["DistributedAsyncEngine"]
+
+TRANSPORTS = ("inproc", "socket")
+
+
+class DistributedAsyncEngine(_EngineBase):
+    """Live parameter-server engine; see module docstring."""
+
+    _donate_state = False  # the server owns state evolution; never alias it
+    tick_timeout_s = 120.0
+
+    def __init__(self, spec: RunSpec):
+        super().__init__(spec)
+        assert spec.num_workers >= 1, "distributed mode needs num_workers >= 1"
+        assert spec.transport in TRANSPORTS, (
+            f"RunSpec.transport must be one of {TRANSPORTS}, got {spec.transport!r}"
+        )
+        self._server = None
+        self._transport = None
+        self._workers: list = []
+        self._trace_writer = None
+        self._submitted = 0
+        self._base_version = 0
+
+    def _build(self, key):
+        from repro.training.steps import init_train_state
+
+        spec = self.spec
+        return init_train_state(
+            key,
+            spec.cfg,
+            spec.pipeline,
+            adapt=spec.adapt,
+            params=spec.params,
+            fuse=spec.fuse,
+        )
+
+    # -- cluster lifecycle ---------------------------------------------------
+
+    def _start(self, state) -> None:
+        from repro.distributed.server import ParameterServer
+        from repro.distributed.transport import InProcTransport, SocketTransport
+        from repro.distributed.worker import make_grad_fn, socket_worker_main, worker_loop
+
+        spec = self.spec
+        self._base_version = int(state.step)
+        if spec.trace_path:
+            from repro.async_engine.events import TraceWriter
+
+            self._trace_writer = TraceWriter(
+                spec.trace_path, resume=self._base_version > 0
+            )
+        if spec.transport == "socket":
+            transport = SocketTransport()
+        else:
+            transport = InProcTransport()
+        server = ParameterServer(
+            state,
+            self.pipeline,
+            transport,
+            fuse=spec.fuse,
+            trace=self._trace_writer,
+            on_trace=self._traces.append,
+        )
+        server.start()
+        workers: list = []
+        if spec.transport == "socket":
+            import multiprocessing
+
+            mp = multiprocessing.get_context("spawn")
+            for w in range(spec.num_workers):
+                p = mp.Process(
+                    target=socket_worker_main,
+                    args=(transport.address, spec.cfg, w),
+                    daemon=True,
+                )
+                p.start()
+                workers.append(p)
+        else:
+            grad_fn = make_grad_fn(spec.cfg)  # one jit cache, shared by threads
+            for w in range(spec.num_workers):
+                t = threading.Thread(
+                    target=worker_loop,
+                    args=(transport.worker_endpoint(), grad_fn, w),
+                    daemon=True,
+                    name=f"ps-worker-{w}",
+                )
+                t.start()
+                workers.append(t)
+        self._server, self._transport, self._workers = server, transport, workers
+        self._submitted = 0
+
+    def _stop_cluster(self, *, finalize: bool) -> None:
+        self._server.request_stop()
+        for w in self._workers:
+            w.join(timeout=30)
+        self._server.shutdown()
+        self._transport.close()
+        if self._trace_writer is not None:
+            if finalize:
+                self._trace_writer.finalize()
+            else:
+                self._trace_writer.abort()
+        self._server = None
+        self._transport = None
+        self._workers = []
+        self._trace_writer = None
+
+    # -- Engine protocol -----------------------------------------------------
+
+    def tick(self, state, batch) -> tuple[Any, dict]:
+        if self._server is None:
+            self._start(state)
+        self._server.submit_batch(batch)
+        self._submitted += 1
+        lag = self.spec.num_workers - 1  # gradients allowed in flight
+        target = self._base_version + max(1, self._submitted - lag)
+        self._server.await_applied(target, timeout=self.tick_timeout_s)
+        return self._server.snapshot()
+
+    def refresh(self, state):
+        if self._server is None:
+            return super().refresh(state)
+        return self._server.call(super().refresh)
+
+    def finish(self, state):
+        """Drain every outstanding gradient, stop workers, finalize trace."""
+        if self._server is None:
+            return state
+        self._server.await_applied(
+            self._base_version + self._submitted, timeout=self.tick_timeout_s
+        )
+        state, _ = self._server.snapshot()
+        self._stop_cluster(finalize=True)
+        return state
+
+    def abort(self) -> None:
+        """Failure-path teardown: no drain, trace left as a ``.part``."""
+        if self._server is None:
+            return
+        self._stop_cluster(finalize=False)

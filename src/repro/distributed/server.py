@@ -1,0 +1,255 @@
+"""The live parameter server: serial applies, measured staleness.
+
+One loop thread owns the training state and consumes ONE message stream from
+the transport (worker pulls/pushes interleaved with engine control messages),
+so every apply is serial and the staleness stamp is exact by construction:
+
+    tau = applies committed between this worker's pull and its push
+
+Each received gradient runs the SAME update pipeline the simulated engines
+execute — fused to the flat chain when ``fuse=True`` (the server state stays
+flat-resident, ISSUE-8 style), link-by-link otherwise — with the *measured*
+tau as ``StepContext.tau``, so ``scale_by_staleness`` weights the update by
+``alpha(tau)/alpha_c`` exactly as the paper's Alg. 1 prescribes, and
+``record_taus`` feeds the in-jit histogram the online-adaptation refresh
+drains.  Measurements stream to an :class:`~repro.async_engine.events
+.TraceWriter` so a live run leaves a replayable staleness trace behind.
+
+The engine talks to the loop through thread-safe calls: ``submit_batch``
+(batches ride the same queue, so worker dispatch stays totally ordered),
+``await_applied`` / ``snapshot`` (the tick boundary), ``call`` (refresh runs
+*between* applies — atomic with respect to the update stream), and
+``request_stop`` / ``shutdown``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import transform as T
+
+__all__ = ["ParameterServer"]
+
+
+class ParameterServer:
+    """Serial apply loop over a transport's message stream (module docstring).
+
+    ``state`` is a :class:`~repro.training.steps.TrainState` (no delayed ring
+    — delay is real here, not simulated) whose params must be float32: the
+    wire format is the packed flat ``(N,)`` f32 buffer.  ``on_trace`` is
+    called whenever jax (re)traces the apply (the engine's retrace counter).
+    """
+
+    def __init__(
+        self,
+        state: Any,
+        pipeline: Any,
+        transport: Any,
+        *,
+        fuse: bool = False,
+        trace: Any = None,
+        on_trace: Callable | None = None,
+        poll_s: float = 0.05,
+    ):
+        from repro.training.steps import _fused_form, _resolve_pipeline
+
+        self._transport = transport
+        self._trace = trace
+        self._poll_s = float(poll_s)
+        apply_fn, _ = _resolve_pipeline(pipeline)
+        fused = _fused_form(pipeline) if fuse else None
+        if fused is not None:
+            apply_fn, _ = _resolve_pipeline(fused)
+        flat_native = isinstance(state.params, jax.Array) and state.params.ndim == 1
+        self._flat_grads = fused is not None or flat_native
+        assert all(
+            l.dtype == jnp.float32 for l in jax.tree.leaves(state.params)
+        ), "the distributed engine needs float32 params (flat f32 wire format)"
+
+        def apply(state, g_flat, tau):
+            if on_trace is not None:
+                on_trace(1)  # runs only when jax (re)traces
+            from repro.training.adapt import alpha_lookup, record_taus
+
+            adapt = state.adapt
+            alpha = jnp.float32(1.0)
+            if adapt is not None:
+                adapt = record_taus(adapt, tau)
+                alpha = alpha_lookup(adapt, tau)
+            ctx = T.StepContext(tau=tau, adapt=adapt, staleness_applied=False)
+            grads = g_flat if self._flat_grads else T.unpack_flat(g_flat, state.params)
+            new_params, new_opt = apply_fn(grads, state.opt_state, state.params, ctx)
+            new_state = dataclasses.replace(
+                state,
+                params=new_params,
+                opt_state=new_opt,
+                step=state.step + 1,
+                adapt=adapt,
+            )
+            return new_state, {"alpha": alpha}
+
+        self._apply = jax.jit(apply)
+        self._pack = jax.jit(T.pack_flat) if not flat_native else None
+        self._cond = threading.Condition()
+        self._state = state
+        self._version = int(state.step)
+        self._base_version = self._version
+        self._tau_sum = 0.0
+        self._metrics: dict = {
+            "loss": np.float32(np.nan),
+            "tau": np.float32(0.0),
+            "tau_mean": np.float32(0.0),
+            "alpha": np.float32(1.0),
+            "live_frac": np.float32(1.0),
+        }
+        self._error: BaseException | None = None
+        self._batches: deque = deque()
+        self._parked: deque = deque()  # (worker_id, reply_fn) awaiting a batch
+        self._stopping = False
+        self._thread: threading.Thread | None = None
+
+    # -- engine-facing API (thread-safe) ------------------------------------
+
+    @property
+    def version(self) -> int:
+        with self._cond:
+            return self._version
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._run, daemon=True, name="param-server")
+        self._thread.start()
+
+    def submit_batch(self, batch: Any) -> None:
+        """Queue one batch; the bounded transport queue is the backpressure."""
+        self._transport.send(("batch", batch))
+
+    def await_applied(self, target_version: int, timeout: float = 120.0) -> None:
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: self._version >= target_version or self._error is not None,
+                timeout=timeout,
+            )
+        if self._error is not None:
+            raise RuntimeError("parameter server loop failed") from self._error
+        if not ok:
+            raise TimeoutError(
+                f"parameter server: no update applied within {timeout}s "
+                f"(at version {self.version}, waiting for {target_version} — "
+                "dead worker or starved batch queue?)"
+            )
+
+    def snapshot(self) -> tuple[Any, dict]:
+        """Latest state + latest applied-update metrics (consistent pair)."""
+        with self._cond:
+            return self._state, dict(self._metrics)
+
+    def call(self, fn: Callable[[Any], Any], timeout: float = 120.0) -> Any:
+        """Run ``fn(state) -> state`` inside the loop, between applies."""
+        box: list = []
+        done = threading.Event()
+        self._transport.send(("call", fn, box, done))
+        if not done.wait(timeout=timeout):
+            raise TimeoutError("parameter server: refresh call timed out")
+        if not box:
+            raise RuntimeError("parameter server loop failed") from self._error
+        return box[0]
+
+    def request_stop(self) -> None:
+        """Tell workers to exit at their next pull/push; applies cease."""
+        self._transport.send(("stop",))
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        """Stop the loop thread (after ``request_stop`` + worker joins)."""
+        self._transport.send(("shutdown",))
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    # -- loop internals ------------------------------------------------------
+
+    def _params_np(self) -> np.ndarray:
+        p = self._state.params if self._pack is None else self._pack(self._state.params)
+        return np.asarray(p, np.float32)
+
+    def _dispatch(self) -> None:
+        while self._batches and self._parked and not self._stopping:
+            wid, reply = self._parked.popleft()
+            batch = self._batches.popleft()
+            reply(("work", self._version, self._params_np(), jax.tree.map(np.asarray, batch)))
+
+    def _handle_push(self, msg, reply) -> None:
+        _, wid, pull_version, g_flat, loss = msg
+        if self._stopping:
+            if reply is not None:
+                reply(("stop",))
+            return
+        tau = self._version - int(pull_version)
+        new_state, m = self._apply(
+            self._state, jnp.asarray(g_flat, jnp.float32), jnp.int32(tau)
+        )
+        with self._cond:
+            self._state = new_state
+            self._version += 1
+            self._tau_sum += tau
+            applied = self._version - self._base_version
+            self._metrics = {
+                "loss": np.float32(loss),
+                "tau": np.float32(tau),
+                "tau_mean": np.float32(self._tau_sum / max(applied, 1)),
+                "alpha": m["alpha"],
+                "live_frac": np.float32(1.0),
+            }
+            self._cond.notify_all()
+        if self._trace is not None:
+            self._trace.append(tau, wid)
+        if reply is not None:
+            reply(("ack", tau))
+
+    def _run(self) -> None:
+        try:
+            while True:
+                item = self._transport.recv(timeout=self._poll_s)
+                if item is None:
+                    if getattr(self._transport, "closed", False):
+                        return
+                    continue
+                msg, reply = item
+                kind = msg[0]
+                if kind == "batch":
+                    self._batches.append(msg[1])
+                    self._dispatch()
+                elif kind == "pull":
+                    if self._stopping:
+                        reply(("stop",))
+                    else:
+                        self._parked.append((msg[1], reply))
+                        self._dispatch()
+                elif kind == "push":
+                    self._handle_push(msg, reply)
+                elif kind == "call":
+                    _, fn, box, done = msg
+                    try:
+                        with self._cond:
+                            self._state = fn(self._state)
+                            box.append(self._state)
+                    finally:
+                        done.set()
+                elif kind == "stop":
+                    self._stopping = True
+                    while self._parked:
+                        _, reply_fn = self._parked.popleft()
+                        reply_fn(("stop",))
+                elif kind == "shutdown":
+                    return
+                else:
+                    raise ValueError(f"parameter server: unknown message {kind!r}")
+        except BaseException as e:  # surface loop failures at the tick boundary
+            with self._cond:
+                self._error = e
+                self._cond.notify_all()

@@ -1,0 +1,241 @@
+"""Pluggable message fabric between the parameter server and its workers.
+
+Both transports present the same two surfaces:
+
+* server side — ``recv(timeout) -> (msg, reply_fn) | None`` plus ``send(msg)``
+  for reply-less control messages (batches, stop, refresh calls).  The server
+  loop consumes ONE stream whatever the fabric, so ordering, staleness
+  stamping, and shutdown live in :mod:`repro.distributed.server` once.
+* worker side — ``rpc(msg) -> reply``: one outstanding request per worker
+  (pull params / push gradient), which is exactly the parameter-server
+  protocol of Keuper & Pfreundt (arXiv:1505.04956).
+
+:class:`InProcTransport` runs workers as threads over a single bounded
+``queue.Queue`` — the bound is the backpressure: producers block once the
+server falls ``capacity`` messages behind.  :class:`SocketTransport` carries
+the same tuples over TCP (length-prefixed pickles) for true multi-process
+workers; its acceptor adapts each connection onto the same internal queue, so
+the server loop cannot tell the fabrics apart.  Payloads are plain numpy /
+python objects in both directions — flat ``(N,)`` float32 buffers for params
+and gradients — so a message pickles identically whichever fabric moves it.
+
+Sockets bind to localhost by default and carry pickled payloads: this is a
+single-machine research transport, not a hardened network protocol.
+"""
+
+from __future__ import annotations
+
+import pickle
+import queue
+import socket
+import struct
+import threading
+from typing import Any, Callable, Protocol
+
+__all__ = [
+    "ServerTransport",
+    "WorkerEndpoint",
+    "InProcTransport",
+    "InProcWorkerEndpoint",
+    "SocketTransport",
+    "SocketWorkerEndpoint",
+]
+
+_DEFAULT_CAPACITY = 64
+_LEN = struct.Struct("!I")
+
+
+class ServerTransport(Protocol):
+    """What the server loop needs from a fabric; see module docstring."""
+
+    def recv(self, timeout: float | None = None) -> tuple[Any, Callable | None] | None: ...
+
+    def send(self, msg: Any) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class WorkerEndpoint(Protocol):
+    """What a worker loop needs: blocking request/reply."""
+
+    def rpc(self, msg: Any) -> Any: ...
+
+    def close(self) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# In-process: threads over one bounded queue
+# ---------------------------------------------------------------------------
+
+
+class InProcTransport:
+    """Thread fabric: one bounded FIFO of ``(msg, reply_fn)`` pairs.
+
+    FIFO gives a total order over every pull/push/control message; the
+    ``capacity`` bound is the backpressure (producers block while the server
+    is ``capacity`` messages behind).
+    """
+
+    def __init__(self, capacity: int = _DEFAULT_CAPACITY):
+        self._queue: queue.Queue = queue.Queue(maxsize=capacity)
+        self._closed = threading.Event()
+
+    def recv(self, timeout: float | None = None):
+        try:
+            return self._queue.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def send(self, msg: Any) -> None:
+        self._queue.put((msg, None))
+
+    def worker_endpoint(self) -> "InProcWorkerEndpoint":
+        return InProcWorkerEndpoint(self._queue)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    def close(self) -> None:
+        self._closed.set()
+
+
+class InProcWorkerEndpoint:
+    """One worker's handle: request down the shared queue, reply back on a
+    private one (one outstanding rpc per endpoint)."""
+
+    def __init__(self, q: queue.Queue):
+        self._queue = q
+        self._reply: queue.Queue = queue.Queue(maxsize=1)
+
+    def rpc(self, msg: Any, timeout: float | None = 300.0) -> Any:
+        self._queue.put((msg, self._reply.put))
+        return self._reply.get(timeout=timeout)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Sockets: length-prefixed pickles over localhost TCP
+# ---------------------------------------------------------------------------
+
+
+def _send_msg(sock: socket.socket, obj: Any, lock: threading.Lock) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    with lock:
+        sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None  # peer closed
+        buf += chunk
+    return buf
+
+
+def _recv_msg(sock: socket.socket) -> Any | None:
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    body = _recv_exact(sock, _LEN.unpack(head)[0])
+    if body is None:
+        return None
+    return pickle.loads(body)
+
+
+class SocketTransport:
+    """TCP fabric: an acceptor thread adapts every worker connection onto the
+    same internal bounded queue the in-proc fabric uses, and each reply_fn
+    writes back down the originating connection.  ``address`` is the bound
+    ``(host, port)`` to hand to spawned worker processes."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, capacity: int = _DEFAULT_CAPACITY):
+        self._queue: queue.Queue = queue.Queue(maxsize=capacity)
+        self._closed = threading.Event()
+        self._conns: list[socket.socket] = []
+        self._lock = threading.Lock()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen()
+        self.address: tuple[str, int] = self._listener.getsockname()
+        self._acceptor = threading.Thread(target=self._accept_loop, daemon=True)
+        self._acceptor.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(target=self._read_loop, args=(conn,), daemon=True).start()
+
+    def _read_loop(self, conn: socket.socket) -> None:
+        wlock = threading.Lock()
+
+        def reply(obj: Any) -> None:
+            _send_msg(conn, obj, wlock)
+
+        while not self._closed.is_set():
+            try:
+                msg = _recv_msg(conn)
+            except OSError:
+                return
+            if msg is None:
+                return  # worker hung up
+            self._queue.put((msg, reply))
+
+    def recv(self, timeout: float | None = None):
+        try:
+            return self._queue.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def send(self, msg: Any) -> None:
+        self._queue.put((msg, None))
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    def close(self) -> None:
+        self._closed.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            for conn in self._conns:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            self._conns.clear()
+
+
+class SocketWorkerEndpoint:
+    """Worker-process side of :class:`SocketTransport`: one connection, one
+    outstanding rpc."""
+
+    def __init__(self, address: tuple[str, int], timeout: float = 300.0):
+        self._sock = socket.create_connection(tuple(address), timeout=timeout)
+        self._wlock = threading.Lock()
+
+    def rpc(self, msg: Any, timeout: float | None = None) -> Any:
+        _send_msg(self._sock, msg, self._wlock)
+        reply = _recv_msg(self._sock)
+        if reply is None:
+            raise ConnectionError("parameter server closed the connection")
+        return reply
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,75 @@
+"""Worker side of the live parameter server: pull, grad, push.
+
+A worker is a dumb loop over two rpcs:
+
+    ("pull", wid)                         -> ("work", version, p_flat, batch)
+    ("push", wid, version, g_flat, loss)  -> ("ack", tau) | ("stop",)
+
+The wire format is flat ``(N,)`` float32 both ways — the same packed layout
+the fused pipeline keeps resident on the server — so a worker never sees the
+param pytree; the loss is computed through the :func:`~repro.optim.transform
+.flat_view` boundary (its VJP is the pack, so the gradient is born flat),
+exactly as flat-native fused training does in-process.
+
+``worker_loop`` runs as a thread over :class:`~repro.distributed.transport
+.InProcTransport`; ``socket_worker_main`` is the importable entry a
+``multiprocessing.spawn`` process runs against :class:`SocketTransport`
+(spawn, not fork — forking an initialized JAX runtime deadlocks).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["make_grad_fn", "worker_loop", "socket_worker_main"]
+
+
+def make_grad_fn(cfg) -> Callable:
+    """Jitted ``(p_flat, batch) -> (loss: float, g_flat: np.float32[N])``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+    from repro.optim import transform as T
+    from repro.training.steps import init_params
+
+    template = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+    def lf(p_flat, batch):
+        return M.loss_fn(T.flat_view(p_flat, template), batch, cfg)
+
+    vg = jax.jit(jax.value_and_grad(lf, has_aux=True))
+
+    def grad_fn(p_flat, batch):
+        batch = jax.tree.map(jnp.asarray, batch)
+        (loss, _aux), g_flat = vg(jnp.asarray(p_flat), batch)
+        return float(loss), np.asarray(g_flat, np.float32)
+
+    return grad_fn
+
+
+def worker_loop(endpoint, grad_fn: Callable, worker_id: int) -> None:
+    """Pull/compute/push until the server says stop (at either rpc)."""
+    try:
+        while True:
+            reply = endpoint.rpc(("pull", worker_id))
+            if reply[0] == "stop":
+                return
+            _, version, p_flat, batch = reply
+            loss, g_flat = grad_fn(p_flat, batch)
+            ack = endpoint.rpc(("push", worker_id, version, g_flat, loss))
+            if ack[0] == "stop":
+                return
+    finally:
+        endpoint.close()
+
+
+def socket_worker_main(address, cfg, worker_id: int) -> None:
+    """Entry point for a spawned worker process (importable, hence picklable
+    by ``multiprocessing.get_context("spawn")``)."""
+    from repro.distributed.transport import SocketWorkerEndpoint
+
+    endpoint = SocketWorkerEndpoint(tuple(address))
+    worker_loop(endpoint, make_grad_fn(cfg), worker_id)

@@ -47,6 +47,16 @@ def main():
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--reduced", action="store_true", help="CPU-sized same-family variant")
     ap.add_argument("--async_psgd", action="store_true", help="MindTheStep async step")
+    ap.add_argument("--engine", default=None, choices=["sync", "async", "distributed"],
+                    help="engine mode override; 'distributed' runs the LIVE "
+                         "parameter server (repro.distributed): --workers real "
+                         "workers over --transport, measured staleness")
+    ap.add_argument("--transport", default="inproc", choices=["inproc", "socket"],
+                    help="distributed worker fabric: threads/queues, or TCP + "
+                         "multiprocessing.spawn for true multi-process")
+    ap.add_argument("--trace_out", default=None,
+                    help="stream the live run's measured staleness to this "
+                         "events-format trace file (distributed engine only)")
     ap.add_argument("--workers", type=int, default=16, help="modeled async workers m")
     ap.add_argument("--ring", type=int, default=16, help="delayed-gradient ring size")
     ap.add_argument("--ring_dtype", default=None, choices=["float32", "bfloat16"],
@@ -80,6 +90,12 @@ def main():
             "--checkpoint_dir does nothing without --checkpoint_every N "
             "(to save) and/or --resume (to restore)"
         )
+    mode = args.engine or ("async" if args.async_psgd else "sync")
+    if args.trace_out and mode != "distributed":
+        ap.error("--trace_out needs --engine distributed (live staleness capture)")
+    # The live and simulated async engines share the MindTheStep pipeline;
+    # only sync mode trains the plain chain.
+    use_staleness = args.async_psgd or mode in ("async", "distributed")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -96,7 +112,7 @@ def main():
 
     # -- staleness link + the run spec ----------------------------------------
     adapt = None
-    if args.async_psgd:
+    if use_staleness:
         sched, model, adapt = default_adapt_setup(args.lr, args.workers, args.ring)
         # m enables the online estimator; its tau_max must cover adapt's so a
         # refreshed table always fills the jit-resident one.
@@ -117,12 +133,12 @@ def main():
     spec = RunSpec(
         cfg=cfg,
         pipeline=pipeline,
-        mode="async" if args.async_psgd else "sync",
+        mode=mode,
         num_steps=args.steps,
         batch_size=args.batch,
         seq_len=args.seq,
         num_workers=args.workers,
-        ring=args.ring if args.async_psgd else 0,
+        ring=args.ring if mode == "async" else 0,
         ring_dtype=(
             None
             if args.ring_dtype is None
@@ -132,13 +148,15 @@ def main():
         ),
         adapt=adapt,
         fuse=args.fuse,
+        transport=args.transport,
+        trace_path=args.trace_out,
         refresh_every=args.refresh_every,
         seed=args.seed,
         params=params,
     )
 
     n_params = flat_size(params)
-    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M async={args.async_psgd} "
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M mode={mode} "
           f"fused={args.fused} fuse={args.fuse}")
 
     if args.resume:
@@ -171,11 +189,23 @@ def main():
         print(f"nothing to do: checkpoint already at step {result.step} "
               f"of {args.steps}")
         return
-    if args.async_psgd and args.refresh_every:
+    if use_staleness and args.refresh_every:
         est = T.staleness_link(pipeline).estimator
         lam = est.fit("poisson").lam
         print(f"online estimator: lam={lam:.2f} (m={args.workers}), "
               f"n_seen={est.n_seen}")
+    if args.trace_out:
+        import numpy as np
+
+        from repro.async_engine.events import load_trace
+        from repro.core.staleness import fit_all_models
+
+        taus = load_trace(args.trace_out)
+        fits = fit_all_models(taus, m=args.workers)
+        name, (_, dist) = min(fits.items(), key=lambda kv: kv[1][1])
+        print(f"live trace: {len(taus)} updates -> {args.trace_out}  "
+              f"tau mean={float(np.mean(taus)):.2f}  "
+              f"best model={name} (Bhattacharyya {dist:.4f})")
     print(f"final loss: {result.history[-1]['loss']:.4f}")
 
 

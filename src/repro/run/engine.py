@@ -119,6 +119,26 @@ class _EngineBase:
             return jax.tree.map(jnp.copy, state)
         return state
 
+    def _build(self, key):
+        """Initial state from a PRNG key (the key stays an *argument* so
+        :meth:`build_template` can trace this abstractly)."""
+        raise NotImplementedError
+
+    def build(self):
+        return self._own(self._build(jax.random.PRNGKey(self.spec.seed)))
+
+    def build_template(self):
+        """Shape/dtype-only build for checkpoint restore: the resume path
+        needs a structural template, not initialized arrays, so this traces
+        :meth:`_build` with ``jax.eval_shape`` — no model init FLOPs, no
+        ring allocation.  Engines whose build cannot trace abstractly (e.g.
+        a sharded ``device_put`` that rejects tracers, or a prebuilt state)
+        fall back to the concrete build."""
+        try:
+            return jax.eval_shape(self._build, jax.random.PRNGKey(self.spec.seed))
+        except Exception:
+            return self.build()
+
     def tick(self, state, batch):
         if self._tick is None:
             self._tick = self._jit(self._make_step())
@@ -157,19 +177,17 @@ class _EngineBase:
 class SyncEngine(_EngineBase):
     """Synchronous data-parallel engine (paper §III SyncPSGD baseline)."""
 
-    def build(self):
+    def _build(self, key):
         from repro.training.steps import init_train_state
 
         spec = self.spec
-        return self._own(
-            init_train_state(
-                jax.random.PRNGKey(spec.seed),
-                spec.cfg,
-                spec.pipeline,
-                adapt=spec.adapt,
-                params=spec.params,
-                fuse=spec.fuse,
-            )
+        return init_train_state(
+            key,
+            spec.cfg,
+            spec.pipeline,
+            adapt=spec.adapt,
+            params=spec.params,
+            fuse=spec.fuse,
         )
 
     def _make_step(self):
@@ -187,21 +205,19 @@ class AsyncEngine(_EngineBase):
         assert spec.ring > 0, "async mode needs RunSpec.ring (delayed-ring depth)"
         assert spec.adapt is not None, "async mode needs RunSpec.adapt (see make_adapt)"
 
-    def build(self):
+    def _build(self, key):
         from repro.training.steps import init_train_state
 
         spec = self.spec
-        return self._own(
-            init_train_state(
-                jax.random.PRNGKey(spec.seed),
-                spec.cfg,
-                spec.pipeline,
-                async_ring=spec.ring,
-                adapt=spec.adapt,
-                params=spec.params,
-                fuse=spec.fuse,
-                ring_dtype=spec.ring_dtype,
-            )
+        return init_train_state(
+            key,
+            spec.cfg,
+            spec.pipeline,
+            async_ring=spec.ring,
+            adapt=spec.adapt,
+            params=spec.params,
+            fuse=spec.fuse,
+            ring_dtype=spec.ring_dtype,
         )
 
     def _make_step(self):
@@ -233,22 +249,20 @@ class ShardedAsyncEngine(_EngineBase):
 
             self.mesh = make_workers_mesh()
 
-    def build(self):
+    def _build(self, key):
         from repro.training.steps import init_sharded_async_state
 
         spec = self.spec
-        return self._own(
-            init_sharded_async_state(
-                jax.random.PRNGKey(spec.seed),
-                spec.cfg,
-                spec.pipeline,
-                ring=spec.ring,
-                adapt=spec.adapt,
-                params=spec.params,
-                mesh=self.mesh,
-                fuse=spec.fuse,
-                ring_dtype=spec.ring_dtype,
-            )
+        return init_sharded_async_state(
+            key,
+            spec.cfg,
+            spec.pipeline,
+            ring=spec.ring,
+            adapt=spec.adapt,
+            params=spec.params,
+            mesh=self.mesh,
+            fuse=spec.fuse,
+            ring_dtype=spec.ring_dtype,
         )
 
     def _make_step(self):
@@ -313,5 +327,11 @@ _ENGINES = {
 
 
 def make_engine(spec: RunSpec) -> Engine:
-    """The engine for ``spec.mode`` (sync | async | sharded_async)."""
+    """The engine for ``spec.mode`` (sync | async | sharded_async |
+    distributed).  The live parameter-server engine imports lazily — thread
+    and transport machinery stays out of the simulated-mode import path."""
+    if spec.mode == "distributed":
+        from repro.distributed.engine import DistributedAsyncEngine
+
+        return DistributedAsyncEngine(spec)
     return _ENGINES[spec.mode](spec)

@@ -10,6 +10,7 @@ tiny and mode-blind:
         state, metrics = engine.tick(state, batch)
         if refresh boundary: state = engine.refresh(state)   # then on_refresh
         hooks.on_tick
+    state = engine.finish(state)              # optional: live engines drain
     hooks.on_end
 
 Engine modes, fusion, sharding, and the online-adaptation boundary live in
@@ -87,36 +88,57 @@ def run(
     """
     if engine is None:
         engine = make_engine(spec)
-    state = engine.build()
-    if spec.refresh_every and hasattr(engine, "require_refreshable"):
-        # Fail fast, before any (possibly TPU-scale) step runs: the refresh
-        # boundary needs a refresh-capable pipeline and an AdaptState.
-        engine.require_refreshable(state)
     start_step = 0
     if resume_from is not None:
         from repro.run.ckpt import restore_checkpoint
 
+        # Restore needs only a shape/dtype template, not initialized arrays:
+        # build_template traces the build abstractly (no model-init FLOPs, no
+        # ring allocation) where the engine supports it.
+        template = (
+            engine.build_template() if hasattr(engine, "build_template") else engine.build()
+        )
         state, start_step = restore_checkpoint(
-            resume_from, state, engine.pipeline, step=resume_step
+            resume_from, template, engine.pipeline, step=resume_step
         )
         assert start_step <= spec.num_steps, (
             f"checkpoint step {start_step} is beyond num_steps={spec.num_steps}"
         )
+    else:
+        state = engine.build()
+    if spec.refresh_every and hasattr(engine, "require_refreshable"):
+        # Fail fast, before any (possibly TPU-scale) step runs: the refresh
+        # boundary needs a refresh-capable pipeline and an AdaptState.
+        engine.require_refreshable(state)
     ctx = RunContext(spec=spec, engine=engine, state=state, step=start_step, start_step=start_step)
     batches = spec.batch_stream(start_step)
     for hook in hooks:
         hook.on_start(ctx)
-    for i in range(start_step, spec.num_steps):
-        batch = next(batches)
-        state, metrics = engine.tick(state, batch)
-        ctx.state, ctx.metrics, ctx.step = state, metrics, i + 1
-        if spec.refresh_every and (i + 1) % spec.refresh_every == 0:
-            state = engine.refresh(state)
-            ctx.state = state
+    try:
+        for i in range(start_step, spec.num_steps):
+            batch = next(batches)
+            state, metrics = engine.tick(state, batch)
+            ctx.state, ctx.metrics, ctx.step = state, metrics, i + 1
+            if spec.refresh_every and (i + 1) % spec.refresh_every == 0:
+                state = engine.refresh(state)
+                ctx.state = state
+                for hook in hooks:
+                    hook.on_refresh(ctx)
             for hook in hooks:
-                hook.on_refresh(ctx)
-        for hook in hooks:
-            hook.on_tick(ctx)
+                hook.on_tick(ctx)
+    except BaseException:
+        # Engines running live machinery (worker threads/processes) tear it
+        # down without draining; a live trace capture stays salvageable.
+        abort = getattr(engine, "abort", None)
+        if abort is not None:
+            abort()
+        raise
+    finish = getattr(engine, "finish", None)
+    if finish is not None:
+        # Live engines drain outstanding work here, so on_end hooks (e.g. a
+        # final checkpoint) observe the fully-applied state.
+        state = finish(ctx.state)
+        ctx.state = state
     for hook in hooks:
         hook.on_end(ctx)
     return RunResult(

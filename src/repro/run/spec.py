@@ -23,9 +23,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Iterable, Iterator
 
-MODES = ("sync", "async", "sharded_async")
+MODES = ("sync", "async", "sharded_async", "distributed")
+TRANSPORTS = ("inproc", "socket")
 
-__all__ = ["RunSpec", "MODES"]
+__all__ = ["RunSpec", "MODES", "TRANSPORTS"]
 
 
 @dataclasses.dataclass
@@ -38,7 +39,10 @@ class RunSpec:
     the single update definition shared by all three engine modes.  The async
     modes additionally need ``ring`` (delayed-gradient ring depth) and
     ``adapt`` (:class:`~repro.training.adapt.AdaptState` for ``async``,
-    ``WorkerAdaptState`` for ``sharded_async``).
+    ``WorkerAdaptState`` for ``sharded_async``).  ``mode="distributed"``
+    runs the LIVE parameter server (:mod:`repro.distributed`):
+    ``num_workers`` real workers over ``transport``, measured staleness
+    streamed to ``trace_path``.
     """
 
     cfg: Any = None
@@ -64,6 +68,10 @@ class RunSpec:
     alpha_c: float | None = None
     params: Any = None  # pre-initialized params (default: init from seed)
 
+    # -- live parameter server (mode="distributed") --------------------------
+    transport: str = "inproc"  # worker fabric: threads/queues | TCP + spawn
+    trace_path: str | None = None  # stream measured staleness to this file
+
     # -- refresh policy (online adaptation boundary) -------------------------
     refresh_every: int = 0
     refresh_kwargs: dict | None = None
@@ -72,6 +80,9 @@ class RunSpec:
 
     def __post_init__(self):
         assert self.mode in MODES, f"mode must be one of {MODES}, got {self.mode!r}"
+        assert self.transport in TRANSPORTS, (
+            f"transport must be one of {TRANSPORTS}, got {self.transport!r}"
+        )
         assert self.num_steps >= 0, f"num_steps must be >= 0, got {self.num_steps}"
 
     def batch_stream(self, start_step: int = 0) -> Iterator[Any]:

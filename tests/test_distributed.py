@@ -1,0 +1,453 @@
+"""Live parameter-server subsystem: transport, staleness stamping, engine.
+
+Covers the ISSUE-8 tentpole end to end:
+
+* trace I/O — versioned header, append-safe writes, partial-trace detection,
+  resume-extend semantics (a crashed capture is salvageable, never silently
+  truncated);
+* the in-proc transport — FIFO ordering and bounded-queue backpressure;
+* staleness stamping — a scripted pull/push interleaving yields exactly the
+  update-count deltas, and a W=1 live run matches a hand-rolled serial
+  oracle update-for-update (tau == 0 throughout);
+* DistributedAsyncEngine through ``run(spec, hooks=...)`` — live W>=4 runs
+  with Log/Bench/Checkpoint hooks, refresh boundaries, checkpoint/resume
+  continuing the server state AND extending the trace, failure-path abort;
+* live-trace -> trace-replay round trip — the captured distribution replays
+  through the sharded simulator's per-worker trace samplers and converges.
+
+Everything here runs under the ``distributed`` marker (own CI leg with a
+timeout guard); the socket test spawns real worker processes on localhost.
+"""
+
+import dataclasses
+import glob
+import struct
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_engine.events import TraceError, TraceWriter, load_trace
+from repro.configs import get_config, reduced
+from repro.core.staleness import Poisson, fit_all_models
+from repro.core.step_size import make_schedule
+from repro.data import make_batch_for
+from repro.distributed import (
+    InProcTransport,
+    ParameterServer,
+    make_grad_fn,
+)
+from repro.optim import transform as T
+from repro.run import BenchHook, CheckpointHook, Hook, LogHook, RunSpec, run
+from repro.training import init_train_state, make_adapt, make_worker_adapt
+from repro.training.adapt import record_taus
+
+pytestmark = pytest.mark.distributed
+
+TAU_MAX = 31
+RING = 8
+LR = 0.05
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return reduced(get_config("stablelm-1.6b"), d_model=32)
+
+
+def _sched():
+    return make_schedule("poisson_momentum", LR, Poisson(3.0), K=1.0, tau_max=TAU_MAX)
+
+
+def _pipeline(workers=4):
+    link = T.scale_by_staleness(_sched(), LR, m=workers, tau_max=TAU_MAX)
+    return T.chain(link, T.scale(-LR))
+
+
+def _adapt():
+    return make_adapt(_sched(), Poisson(3.0), cdf_support=RING, tau_max=TAU_MAX)
+
+
+def _spec(cfg, *, workers=4, num_steps=8, trace_path=None, **kw):
+    return RunSpec(
+        cfg=cfg,
+        pipeline=_pipeline(workers),
+        mode="distributed",
+        num_steps=num_steps,
+        batch_fn=lambda t: make_batch_for(cfg, batch=2, seq=8, seed=100 + t),
+        num_workers=workers,
+        adapt=_adapt(),
+        trace_path=trace_path,
+        seed=0,
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trace I/O (events.py format)
+# ---------------------------------------------------------------------------
+
+
+class TestTraceIO:
+    def test_roundtrip(self, tmp_path):
+        path = str(tmp_path / "t.bin")
+        w = TraceWriter(path)
+        for i in range(5):
+            w.append(i, worker=i % 2)
+        assert w.finalize() == path
+        assert not glob.glob(path + ".part")
+        taus, workers = load_trace(path, return_workers=True)
+        np.testing.assert_array_equal(taus, np.arange(5))
+        np.testing.assert_array_equal(workers, np.arange(5) % 2)
+
+    def test_unfinalized_refused_then_salvaged(self, tmp_path):
+        path = str(tmp_path / "t.bin")
+        w = TraceWriter(path)
+        for i in range(3):
+            w.append(i)
+        w.abort()  # crash stand-in: .part left behind, no finalized file
+        with pytest.raises(TraceError, match="never finalized"):
+            load_trace(path)
+        np.testing.assert_array_equal(load_trace(path, allow_partial=True), np.arange(3))
+
+    def test_torn_tail_detected_and_truncated(self, tmp_path):
+        path = str(tmp_path / "t.bin")
+        w = TraceWriter(path)
+        w.append(7)
+        w.finalize()
+        with open(path, "ab") as f:
+            f.write(b"\x01\x02\x03")  # torn final record
+        with pytest.raises(TraceError, match="torn"):
+            load_trace(path)
+        np.testing.assert_array_equal(load_trace(path, allow_partial=True), [7])
+
+    def test_bad_magic_and_version(self, tmp_path):
+        bad = str(tmp_path / "bad.bin")
+        with open(bad, "wb") as f:
+            f.write(b"NOTATRCE" + struct.pack("<II", 1, 8))
+        with pytest.raises(TraceError, match="magic"):
+            load_trace(bad)
+        futur = str(tmp_path / "future.bin")
+        with open(futur, "wb") as f:
+            f.write(b"REPROTRC" + struct.pack("<II", 99, 8))
+        with pytest.raises(TraceError, match="version 99"):
+            load_trace(futur)
+
+    def test_missing_raises(self, tmp_path):
+        with pytest.raises(TraceError, match="no trace file"):
+            load_trace(str(tmp_path / "absent.bin"))
+
+    def test_resume_extends_finalized(self, tmp_path):
+        path = str(tmp_path / "t.bin")
+        w = TraceWriter(path)
+        for i in range(3):
+            w.append(i, worker=0)
+        w.finalize()
+        w2 = TraceWriter(path, resume=True)
+        assert w2.count == 3
+        w2.append(9, worker=1)
+        w2.finalize()
+        taus, workers = load_trace(path, return_workers=True)
+        np.testing.assert_array_equal(taus, [0, 1, 2, 9])
+        np.testing.assert_array_equal(workers, [0, 0, 0, 1])
+
+    def test_resume_salvages_partial(self, tmp_path):
+        path = str(tmp_path / "t.bin")
+        w = TraceWriter(path)
+        w.append(5)
+        w.abort()
+        w2 = TraceWriter(path, resume=True)
+        assert w2.count == 1
+        w2.append(6)
+        w2.finalize()
+        np.testing.assert_array_equal(load_trace(path), [5, 6])
+
+
+# ---------------------------------------------------------------------------
+# In-proc transport: ordering + backpressure
+# ---------------------------------------------------------------------------
+
+
+class TestInProcTransport:
+    def test_fifo_ordering(self):
+        tr = InProcTransport()
+        for i in range(50):
+            tr.send(("m", i))
+        seen = [tr.recv(timeout=1.0)[0][1] for _ in range(50)]
+        assert seen == list(range(50))
+
+    def test_rpc_replies_route_to_the_right_endpoint(self):
+        tr = InProcTransport()
+        stop = threading.Event()
+
+        def echo_server():
+            while not stop.is_set():
+                item = tr.recv(timeout=0.05)
+                if item is None:
+                    continue
+                msg, reply = item
+                reply(("echo", msg[1]))
+
+        t = threading.Thread(target=echo_server, daemon=True)
+        t.start()
+        endpoints = [tr.worker_endpoint() for _ in range(3)]
+        try:
+            for round_ in range(5):
+                for i, ep in enumerate(endpoints):
+                    assert ep.rpc(("ping", (i, round_))) == ("echo", (i, round_))
+        finally:
+            stop.set()
+            t.join(timeout=5)
+
+    def test_backpressure_blocks_at_capacity(self):
+        tr = InProcTransport(capacity=2)
+        tr.send(("a",))
+        tr.send(("b",))
+        done = threading.Event()
+
+        def overflow():
+            tr.send(("c",))  # must block until the server consumes one
+            done.set()
+
+        t = threading.Thread(target=overflow, daemon=True)
+        t.start()
+        time.sleep(0.2)
+        assert not done.is_set(), "third send should block at capacity=2"
+        assert tr.recv(timeout=1.0)[0] == ("a",)
+        assert done.wait(timeout=5), "send should complete once a slot frees"
+        t.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# Staleness stamping
+# ---------------------------------------------------------------------------
+
+
+def _server_for(cfg, pipeline, adapt, trace=None):
+    state = init_train_state(jax.random.PRNGKey(0), cfg, pipeline, adapt=adapt)
+    tr = InProcTransport()
+    server = ParameterServer(state, pipeline, tr, trace=trace)
+    server.start()
+    return state, tr, server
+
+
+class TestStalenessStamping:
+    def test_scripted_interleaving(self, tiny_cfg, tmp_path):
+        """tau == server updates applied between this pull and this push."""
+        from repro.async_engine.delayed import flat_size
+
+        path = str(tmp_path / "scripted.bin")
+        trace = TraceWriter(path)
+        pipeline = _pipeline()
+        state, tr, server = _server_for(tiny_cfg, pipeline, _adapt(), trace=trace)
+        n = flat_size(state.params)
+        g = np.zeros(n, np.float32)
+        batch = make_batch_for(tiny_cfg, batch=1, seq=8, seed=0)
+        try:
+            e0, e1 = tr.worker_endpoint(), tr.worker_endpoint()
+            server.submit_batch(batch)
+            server.submit_batch(batch)
+            w0 = e0.rpc(("pull", 0))
+            w1 = e1.rpc(("pull", 1))
+            assert w0[0] == "work" and w0[1] == 0  # both read version 0
+            assert w1[0] == "work" and w1[1] == 0
+            # w0 commits first: no updates since its pull -> tau 0
+            assert e0.rpc(("push", 0, w0[1], g, 1.0)) == ("ack", 0)
+            # w1's snapshot is now one update behind -> tau 1
+            assert e1.rpc(("push", 1, w1[1], g, 1.0)) == ("ack", 1)
+            # a fresh pull after both commits reads version 2, commits at tau 0
+            server.submit_batch(batch)
+            w0b = e0.rpc(("pull", 0))
+            assert w0b[1] == 2
+            assert e0.rpc(("push", 0, w0b[1], g, 1.0)) == ("ack", 0)
+            server.await_applied(3, timeout=10)
+        finally:
+            server.request_stop()
+            server.shutdown()
+            tr.close()
+        trace.finalize()
+        taus, workers = load_trace(path, return_workers=True)
+        np.testing.assert_array_equal(taus, [0, 1, 0])
+        np.testing.assert_array_equal(workers, [0, 1, 0])
+
+    def test_w1_matches_serial_oracle(self, tiny_cfg, tmp_path):
+        """One live worker == serial SGD: tau identically 0 and the final
+        params match a hand-rolled pull/grad/apply loop exactly."""
+        path = str(tmp_path / "w1.bin")
+        steps = 5
+        spec = _spec(tiny_cfg, workers=1, num_steps=steps, trace_path=path)
+        res = run(spec)
+        np.testing.assert_array_equal(load_trace(path), np.zeros(steps, np.int64))
+
+        # serial oracle: same grad fn, same pipeline semantics, no concurrency
+        pipeline = _pipeline(1)
+        state = init_train_state(jax.random.PRNGKey(0), tiny_cfg, pipeline, adapt=_adapt())
+        grad_fn = make_grad_fn(tiny_cfg)
+        tau = jnp.zeros((), jnp.int32)
+
+        @jax.jit
+        def apply(state, g_flat):
+            adapt = record_taus(state.adapt, tau)
+            ctx = T.StepContext(tau=tau, adapt=adapt, staleness_applied=False)
+            grads = T.unpack_flat(g_flat, state.params)
+            new_params, new_opt = T.run_pipeline(
+                pipeline, grads, state.opt_state, state.params, ctx
+            )
+            return dataclasses.replace(
+                state, params=new_params, opt_state=new_opt, step=state.step + 1,
+                adapt=adapt,
+            )
+
+        for t in range(steps):
+            p_flat = np.asarray(T.pack_flat(state.params), np.float32)
+            _, g_flat = grad_fn(p_flat, spec.batch_fn(t))
+            state = apply(state, jnp.asarray(g_flat))
+
+        for a, b in zip(jax.tree.leaves(res.state.params), jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# DistributedAsyncEngine through run(...)
+# ---------------------------------------------------------------------------
+
+
+class TestDistributedEngine:
+    def test_live_run_with_hooks_and_trace(self, tiny_cfg, tmp_path):
+        path = str(tmp_path / "live.bin")
+        steps, workers = 10, 4
+        bench = BenchHook("live", {"workers": workers})
+        spec = _spec(tiny_cfg, workers=workers, num_steps=steps, trace_path=path)
+        res = run(spec, hooks=[LogHook(log_every=5, logger=lambda s: None), bench])
+        assert res.step == steps
+        assert int(np.asarray(res.state.step)) == steps  # finish() drained
+        taus, trace_workers = load_trace(path, return_workers=True)
+        assert len(taus) == steps
+        assert taus.min() >= 0 and taus.max() < steps
+        assert int(np.asarray(res.state.adapt.hist).sum()) == steps
+        assert all(np.isfinite(r["value"]) for r in bench.rows)
+        retrace_rows = [r for r in bench.rows if r["name"].endswith("retraces")]
+        assert retrace_rows and retrace_rows[0]["value"] == 1.0  # one compile
+
+    def test_refresh_runs_inside_the_server(self, tiny_cfg):
+        spec = _spec(tiny_cfg, workers=2, num_steps=6, refresh_every=3)
+        res = run(spec)
+        assert res.step == 6
+        # the refresh drained the in-jit histogram into the host estimator
+        est = T.staleness_link(spec.pipeline).estimator
+        assert est.n_seen > 0
+
+    def test_checkpoint_resume_extends_server_state_and_trace(self, tiny_cfg, tmp_path):
+        path = str(tmp_path / "resume.bin")
+        ckdir = str(tmp_path / "ck")
+        spec_a = _spec(tiny_cfg, workers=4, num_steps=4, trace_path=path)
+        run(spec_a, hooks=[CheckpointHook(ckdir, every=4)])
+        taus_a = load_trace(path)
+        assert len(taus_a) == 4  # drained + finalized
+        # the checkpoint was taken mid-flight (before the final drain): the
+        # saved server version k may lag the tick count
+        (ck_file,) = glob.glob(ckdir + "/step_00000004.npz")
+        k = int(np.load(ck_file)[".step"])
+        assert 1 <= k <= 4
+
+        spec_b = _spec(tiny_cfg, workers=4, num_steps=8, trace_path=path)
+        res_b = run(spec_b, resume_from=ckdir)
+        assert res_b.start_step == 4 and res_b.step == 8
+        # the server resumed from version k and applied the 4 new batches
+        assert int(np.asarray(res_b.state.step)) == k + 4
+        taus_all = load_trace(path)  # finalized again — never corrupted
+        assert len(taus_all) == len(taus_a) + 4
+        np.testing.assert_array_equal(taus_all[: len(taus_a)], taus_a)
+
+    def test_failure_aborts_cluster_and_leaves_salvageable_trace(self, tiny_cfg, tmp_path):
+        path = str(tmp_path / "crash.bin")
+
+        class Boom(Hook):
+            def on_tick(self, ctx):
+                if ctx.step == 3:
+                    raise RuntimeError("injected failure")
+
+        spec = _spec(tiny_cfg, workers=2, num_steps=8, trace_path=path)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            run(spec, hooks=[Boom()])
+        # no finalized trace — but the partial capture is salvageable
+        with pytest.raises(TraceError, match="never finalized"):
+            load_trace(path)
+        salvaged = load_trace(path, allow_partial=True)
+        assert len(salvaged) >= 1
+
+    def test_trace_replay_roundtrip(self, tiny_cfg, tmp_path, workers_mesh):
+        """Live capture -> per-worker trace samplers -> sharded replay: the
+        measured distribution drives the simulator and the run converges."""
+        path = str(tmp_path / "replay.bin")
+        steps, workers = 24, 4
+        spec = _spec(tiny_cfg, workers=workers, num_steps=steps, trace_path=path)
+        losses = _LossesHook()
+        run(spec, hooks=[losses])
+        taus, who = load_trace(path, return_workers=True)
+
+        # measured-vs-modeled: the Table-I machinery accepts live data
+        fits = fit_all_models(taus, m=workers)
+        assert all(np.isfinite(d) for _, d in fits.values())
+
+        per_worker = [
+            taus[who == w] if np.any(who == w) else taus for w in range(workers)
+        ]
+        adapt = make_worker_adapt(
+            _sched().table[: TAU_MAX + 1],
+            [np.asarray(t, np.int64) for t in per_worker],
+            cdf_support=RING,
+        )
+        replay = RunSpec(
+            cfg=tiny_cfg,
+            pipeline=_pipeline(workers),
+            mode="sharded_async",
+            num_steps=steps,
+            batch_fn=spec.batch_fn,
+            num_workers=workers,
+            ring=RING,
+            adapt=adapt,
+            mesh=workers_mesh,
+            seed=0,
+        )
+        replay_losses = _LossesHook()
+        res = run(replay, hooks=[replay_losses])
+        assert res.step == steps
+        assert np.isfinite(replay_losses.losses).all()
+        # converges: the replayed run trains (loss moves down from init)
+        assert replay_losses.losses[-1] < replay_losses.losses[0]
+
+
+class _LossesHook(Hook):
+    def __init__(self):
+        self.losses = []
+
+    def on_tick(self, ctx):
+        self.losses.append(float(np.asarray(ctx.metrics["loss"])))
+
+
+@pytest.fixture(scope="module")
+def workers_mesh():
+    from repro.launch.mesh import make_workers_mesh
+
+    return make_workers_mesh()
+
+
+# ---------------------------------------------------------------------------
+# Socket transport: true multi-process workers on localhost
+# ---------------------------------------------------------------------------
+
+
+class TestSocketTransport:
+    def test_socket_run_spawns_real_processes(self, tiny_cfg, tmp_path):
+        path = str(tmp_path / "sock.bin")
+        spec = _spec(
+            tiny_cfg, workers=2, num_steps=3, trace_path=path, transport="socket"
+        )
+        res = run(spec)
+        assert res.step == 3
+        assert int(np.asarray(res.state.step)) == 3
+        taus = load_trace(path)
+        assert len(taus) == 3
