@@ -8,7 +8,11 @@ measured staleness trace, and reports:
 * ``distributed/tau_mean``           — mean measured staleness (expect ~W-1);
 * ``distributed/bhattacharyya_best`` — distance of the measured tau histogram
   to the best fitted model family (Geometric/BoundedUniform/Poisson/CMP,
-  the paper's Table I machinery on LIVE data instead of simulated traces).
+  the paper's Table I machinery on LIVE data instead of simulated traces);
+* ``distributed/latency_mean_s`` / ``distributed/tau_latency_slope_s`` — the
+  tau-vs-latency view the v2 trace records unlock: mean pull->push round
+  trip, and the OLS slope of latency on version-count tau (how many seconds
+  of real time one unit of staleness costs on this deployment).
 
 Rows are report-only (no gate metadata): live-concurrency numbers need a few
 runs of soak before blessing baselines — the bench-gate ignores rows absent
@@ -57,10 +61,18 @@ def run(num_steps: int, workers: int, d_model: int, seed: int = 0) -> dict:
         t0 = time.perf_counter()
         result = run_spec(spec)
         wall = time.perf_counter() - t0
-        taus = load_trace(trace_path)
+        taus, _who, t_pull, t_push = load_trace(
+            trace_path, return_workers=True, return_times=True
+        )
     applied = int(np.asarray(result.state.step))
     fits = fit_all_models(taus, m=workers)
     best_name, (_, best_dist) = min(fits.items(), key=lambda kv: kv[1][1])
+    latency = t_push - t_pull  # v2 stamps: pull->push round trip per update
+    tau_f = taus.astype(np.float64)
+    if len(taus) > 1 and np.var(tau_f) > 0:
+        slope = float(np.cov(tau_f, latency)[0, 1] / np.var(tau_f))
+    else:
+        slope = 0.0
     return {
         "workers": workers,
         "num_steps": num_steps,
@@ -68,6 +80,8 @@ def run(num_steps: int, workers: int, d_model: int, seed: int = 0) -> dict:
         "updates_per_s": applied / wall,
         "tau_mean": float(np.mean(taus)),
         "tau_max": int(np.max(taus)),
+        "latency_mean_s": float(np.mean(latency)),
+        "tau_latency_slope_s": slope,
         "best_model": best_name,
         "bhattacharyya_best": float(best_dist),
         "fits": {name: float(dist) for name, (_, dist) in fits.items()},
@@ -83,7 +97,8 @@ def main(fast: bool = False):
     print(f"== live parameter server: W={workers}, {out['applied']} applied updates ==")
     print(
         f"updates/s {out['updates_per_s']:>8.2f}   tau mean {out['tau_mean']:.2f} "
-        f"(max {out['tau_max']})"
+        f"(max {out['tau_max']})   latency mean {out['latency_mean_s'] * 1e3:.1f}ms "
+        f"(slope {out['tau_latency_slope_s'] * 1e3:.2f}ms/tau)"
     )
     print("measured-vs-modeled Bhattacharyya distances:")
     for name, dist in sorted(out["fits"].items(), key=lambda kv: kv[1]):
@@ -102,6 +117,11 @@ def main(fast: bool = False):
             applied=out["applied"],
         ),
         bench_row("distributed/tau_mean", out["tau_mean"], "tau", config),
+        bench_row("distributed/latency_mean_s", out["latency_mean_s"], "s", config),
+        bench_row(
+            "distributed/tau_latency_slope_s", out["tau_latency_slope_s"], "s/tau",
+            config, tau_mean=out["tau_mean"],
+        ),
         bench_row(
             "distributed/bhattacharyya_best", out["bhattacharyya_best"], "distance",
             config, model=out["best_model"],

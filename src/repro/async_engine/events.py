@@ -126,8 +126,17 @@ def simulate_staleness_trace(
 #
 # Layout (little-endian):
 #
-#   header   8s magic  |  I version  |  I record size        (16 bytes)
-#   records  i tau     |  i worker                           (8 bytes each)
+#   header      8s magic  |  I version  |  I record size       (16 bytes)
+#   v1 records  i tau     |  i worker                          (8 bytes each)
+#   v2 records  i tau     |  i worker   |  d t_pull | d t_push (24 bytes each)
+#
+# v2 (the current writer format) adds wall-clock stamps per record: the
+# server's epoch seconds at snapshot dispatch (``t_pull``) and at gradient
+# apply (``t_push``) — both read from the SERVER's clock, so they are
+# directly comparable (and monotone per worker) even when workers are
+# separate processes.  ``t_push - t_pull`` is the round-trip latency behind
+# the version-count tau, which is what tau-vs-latency studies plot.  v1
+# files (no stamps) still load; their time arrays come back as None.
 #
 # A live capture appends to ``path + ".part"`` and flushes every record, so a
 # crash loses at most one torn record; ``finalize()`` atomically renames the
@@ -137,16 +146,21 @@ def simulate_staleness_trace(
 # torn tail), so a truncated capture can never silently skew a refit.
 
 _TRACE_MAGIC = b"REPROTRC"
-_TRACE_VERSION = 1
+_TRACE_VERSION = 2
 _TRACE_HEADER = struct.Struct("<8sII")
-_TRACE_RECORD = struct.Struct("<ii")
+_TRACE_RECORD_V1 = struct.Struct("<ii")
+_TRACE_RECORD = struct.Struct("<iidd")
+_RECORD_DTYPE_V1 = np.dtype([("tau", "<i4"), ("worker", "<i4")])
+_RECORD_DTYPE = np.dtype(
+    [("tau", "<i4"), ("worker", "<i4"), ("t_pull", "<f8"), ("t_push", "<f8")]
+)
 
 
 class TraceError(RuntimeError):
     """A staleness-trace file is missing, partial, or malformed."""
 
 
-def _read_trace_file(file_path: str, *, allow_partial: bool) -> tuple[np.ndarray, np.ndarray]:
+def _read_trace_file(file_path: str, *, allow_partial: bool):
     with open(file_path, "rb") as f:
         raw = f.read()
     if len(raw) < _TRACE_HEADER.size:
@@ -154,45 +168,66 @@ def _read_trace_file(file_path: str, *, allow_partial: bool) -> tuple[np.ndarray
     magic, version, rec_size = _TRACE_HEADER.unpack_from(raw)
     if magic != _TRACE_MAGIC:
         raise TraceError(f"{file_path}: not a staleness trace (bad magic {magic!r})")
-    if version != _TRACE_VERSION:
+    if version == 1:
+        expect, dtype = _TRACE_RECORD_V1.size, _RECORD_DTYPE_V1
+    elif version == _TRACE_VERSION:
+        expect, dtype = _TRACE_RECORD.size, _RECORD_DTYPE
+    else:
         raise TraceError(
             f"{file_path}: trace version {version} unsupported (writer is v{_TRACE_VERSION})"
         )
-    if rec_size != _TRACE_RECORD.size:
-        raise TraceError(f"{file_path}: record size {rec_size} != {_TRACE_RECORD.size}")
-    body = raw[_TRACE_HEADER.size:]
+    if rec_size != expect:
+        raise TraceError(f"{file_path}: record size {rec_size} != {expect}")
+    body = raw[_TRACE_HEADER.size :]
     torn = len(body) % rec_size
     if torn and not allow_partial:
         raise TraceError(
             f"{file_path}: {torn} trailing bytes are not a whole record "
             "(torn write) — pass allow_partial=True to salvage"
         )
-    flat = np.frombuffer(body[: len(body) - torn], dtype="<i4").reshape(-1, 2)
-    return flat[:, 0].astype(np.int64), flat[:, 1].astype(np.int32)
+    recs = np.frombuffer(body[: len(body) - torn], dtype=dtype)
+    taus = recs["tau"].astype(np.int64)
+    workers = recs["worker"].astype(np.int32)
+    if version == 1:
+        return taus, workers, None, None
+    return taus, workers, recs["t_pull"].copy(), recs["t_push"].copy()
 
 
 def load_trace(
-    path: str, *, allow_partial: bool = False, return_workers: bool = False
-) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
-    """Load a finalized staleness trace: taus (int64[, workers int32]).
+    path: str,
+    *,
+    allow_partial: bool = False,
+    return_workers: bool = False,
+    return_times: bool = False,
+):
+    """Load a finalized staleness trace: taus int64 [, workers int32]
+    [, t_pull float64 | None, t_push float64 | None].
 
-    A missing ``path`` with a leftover ``path + ".part"`` means the capture
-    crashed before :meth:`TraceWriter.finalize`; that partial file is only
-    read under ``allow_partial=True`` (torn trailing bytes are dropped).
+    ``return_times`` appends the v2 wall-clock stamps (server epoch seconds
+    at snapshot dispatch / at apply); for a v1 trace — stamps were never
+    recorded — both time arrays come back as None.  A missing ``path`` with
+    a leftover ``path + ".part"`` means the capture crashed before
+    :meth:`TraceWriter.finalize`; that partial file is only read under
+    ``allow_partial=True`` (torn trailing bytes are dropped).
     """
     part = path + ".part"
     if os.path.exists(path):
-        taus, workers = _read_trace_file(path, allow_partial=allow_partial)
+        taus, workers, t_pull, t_push = _read_trace_file(path, allow_partial=allow_partial)
     elif os.path.exists(part):
         if not allow_partial:
             raise TraceError(
                 f"{path}: capture was never finalized ({part} exists) — "
                 "pass allow_partial=True to salvage the partial trace"
             )
-        taus, workers = _read_trace_file(part, allow_partial=True)
+        taus, workers, t_pull, t_push = _read_trace_file(part, allow_partial=True)
     else:
         raise TraceError(f"{path}: no trace file (and no partial capture)")
-    return (taus, workers) if return_workers else taus
+    out: tuple = (taus,)
+    if return_workers:
+        out += (workers,)
+    if return_times:
+        out += (t_pull, t_push)
+    return out if len(out) > 1 else taus
 
 
 class TraceWriter:
@@ -210,13 +245,17 @@ class TraceWriter:
     def __init__(self, path: str, *, resume: bool = False):
         self.path = str(path)
         self._part = self.path + ".part"
-        prior: list[tuple[int, int]] = []
+        prior: list[tuple] = []
         if resume:
             try:
-                taus, workers = load_trace(
-                    self.path, allow_partial=True, return_workers=True
+                taus, workers, t_pull, t_push = load_trace(
+                    self.path, allow_partial=True, return_workers=True, return_times=True
                 )
-                prior = list(zip(taus.tolist(), workers.tolist()))
+                if t_pull is None:  # extending a v1 capture: re-stamp as 0.0
+                    t_pull = t_push = np.zeros(len(taus))
+                prior = list(
+                    zip(taus.tolist(), workers.tolist(), t_pull.tolist(), t_push.tolist())
+                )
             except TraceError:
                 pass  # nothing to extend — start fresh
         d = os.path.dirname(self.path)
@@ -225,11 +264,13 @@ class TraceWriter:
         self._f = open(self._part, "wb")
         self._f.write(_TRACE_HEADER.pack(_TRACE_MAGIC, _TRACE_VERSION, _TRACE_RECORD.size))
         self.count = 0
-        for tau, worker in prior:
-            self.append(tau, worker)
+        for tau, worker, tp, ts in prior:
+            self.append(tau, worker, t_pull=tp, t_push=ts)
 
-    def append(self, tau: int, worker: int = 0) -> None:
-        self._f.write(_TRACE_RECORD.pack(int(tau), int(worker)))
+    def append(
+        self, tau: int, worker: int = 0, *, t_pull: float = 0.0, t_push: float = 0.0
+    ) -> None:
+        self._f.write(_TRACE_RECORD.pack(int(tau), int(worker), float(t_pull), float(t_push)))
         self._f.flush()
         self.count += 1
 

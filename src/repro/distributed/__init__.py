@@ -2,29 +2,50 @@
 
 Everything else in the repo *simulates* asynchrony (delay rings, sampled
 taus); this package runs it for real — a serial-apply parameter server, W
-live workers over a pluggable transport, and an exact staleness stamp per
-applied gradient, streamed to a replayable trace.  See
-:class:`~repro.distributed.engine.DistributedAsyncEngine` for the Engine
-seam (``RunSpec(mode="distributed")``).
+live workers over a pluggable transport (``make_transport`` registry), and
+an exact staleness stamp per applied gradient — version-count tau AND
+wall-clock pull/push times — streamed to a replayable trace.  It survives
+real failures too: heartbeats + liveness reclaim on the server, retry-with-
+backoff on the workers, and a declarative :class:`FaultPlan` to inject
+crashes/delays/drops on purpose.  See :class:`~repro.distributed.engine
+.DistributedAsyncEngine` for the Engine seam (``RunSpec(mode="distributed")``).
 """
 
 from repro.distributed.engine import DistributedAsyncEngine
+from repro.distributed.faults import (
+    FAULT_KINDS,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    parse_faults,
+)
 from repro.distributed.server import ParameterServer
 from repro.distributed.transport import (
     InProcTransport,
     InProcWorkerEndpoint,
     SocketTransport,
     SocketWorkerEndpoint,
+    make_transport,
+    register_transport,
+    transport_kinds,
 )
 from repro.distributed.worker import make_grad_fn, socket_worker_main, worker_loop
 
 __all__ = [
     "DistributedAsyncEngine",
     "ParameterServer",
+    "FAULT_KINDS",
+    "FaultPlan",
+    "FaultSpec",
+    "RetryPolicy",
+    "parse_faults",
     "InProcTransport",
     "InProcWorkerEndpoint",
     "SocketTransport",
     "SocketWorkerEndpoint",
+    "make_transport",
+    "register_transport",
+    "transport_kinds",
     "make_grad_fn",
     "socket_worker_main",
     "worker_loop",

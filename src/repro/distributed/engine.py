@@ -1,19 +1,26 @@
 """DistributedAsyncEngine: live AsyncPSGD behind the Engine protocol.
 
-The orchestrator sees a normal engine — ``build`` / ``tick`` / ``refresh``
-(plus the optional ``finish`` / ``abort`` lifecycle) — but a tick does no
-compute itself: it submits the batch to a :class:`~repro.distributed.server
-.ParameterServer` owning the state, and ``spec.num_workers`` live workers
-(threads over :class:`InProcTransport`, or spawned processes over
-:class:`SocketTransport`) pull snapshots, compute gradients, and push them
-back with real, measured staleness.
+The orchestrator sees a normal engine — the full typed lifecycle ``build ->
+tick* -> refresh* -> finish | abort`` of :class:`repro.run.engine.Engine` —
+but a tick does no compute itself: it submits the batch to a :class:`~repro
+.distributed.server.ParameterServer` owning the state, and
+``spec.num_workers`` live workers (launched BY the transport: threads for
+``inproc``, spawned processes for ``socket`` — see ``make_transport``) pull
+snapshots, compute gradients, and push them back with real, measured
+staleness.
 
 The tick keeps up to ``num_workers - 1`` gradients in flight: tick ``t``
 submits batch ``t`` and waits until at least ``t - (W-1)`` updates have been
 applied.  That is the natural pipelining of a W-worker parameter server —
 every snapshot a worker computes on can be up to W-1 updates stale — while
 still guaranteeing each tick observes at least one fresh applied update (so
-hook metrics are always real).
+hook metrics are always real).  The pacing is deadlock-free even under
+worker crashes: with ``spec.worker_timeout`` set, the server's liveness
+sweep reclaims a dead worker's in-flight batch for a live worker, so the
+awaited version always arrives (or the tick raises a diagnostic timeout
+naming the dead workers).  ``spec.faults`` threads a :class:`~repro
+.distributed.faults.FaultPlan` through the server AND every worker;
+``spec.retry`` tunes the workers' rpc-timeout/backoff policy.
 
 The cluster starts lazily on the FIRST tick, using that tick's incoming
 state as the server's initial state — which is exactly how ``resume_from``
@@ -23,20 +30,18 @@ engine-built template, and the server picks up from the restored version
 instead of clobbering them).  ``finish`` drains every outstanding gradient,
 stops the workers, and finalizes the trace; ``abort`` (the orchestrator's
 failure path) stops without draining and leaves a salvageable ``.part``
-trace behind.
+trace behind.  ``liveness`` surfaces the server's per-worker health
+(last-seen stamps, declared-dead set, reclaimed batches).
 """
 
 from __future__ import annotations
 
-import threading
 from typing import Any
 
 from repro.run.engine import _EngineBase
 from repro.run.spec import RunSpec
 
 __all__ = ["DistributedAsyncEngine"]
-
-TRANSPORTS = ("inproc", "socket")
 
 
 class DistributedAsyncEngine(_EngineBase):
@@ -48,9 +53,6 @@ class DistributedAsyncEngine(_EngineBase):
     def __init__(self, spec: RunSpec):
         super().__init__(spec)
         assert spec.num_workers >= 1, "distributed mode needs num_workers >= 1"
-        assert spec.transport in TRANSPORTS, (
-            f"RunSpec.transport must be one of {TRANSPORTS}, got {spec.transport!r}"
-        )
         self._server = None
         self._transport = None
         self._workers: list = []
@@ -75,8 +77,7 @@ class DistributedAsyncEngine(_EngineBase):
 
     def _start(self, state) -> None:
         from repro.distributed.server import ParameterServer
-        from repro.distributed.transport import InProcTransport, SocketTransport
-        from repro.distributed.worker import make_grad_fn, socket_worker_main, worker_loop
+        from repro.distributed.transport import make_transport
 
         spec = self.spec
         self._base_version = int(state.step)
@@ -86,10 +87,7 @@ class DistributedAsyncEngine(_EngineBase):
             self._trace_writer = TraceWriter(
                 spec.trace_path, resume=self._base_version > 0
             )
-        if spec.transport == "socket":
-            transport = SocketTransport()
-        else:
-            transport = InProcTransport()
+        transport = make_transport(spec.transport, **(spec.transport_opts or {}))
         server = ParameterServer(
             state,
             self.pipeline,
@@ -97,32 +95,15 @@ class DistributedAsyncEngine(_EngineBase):
             fuse=spec.fuse,
             trace=self._trace_writer,
             on_trace=self._traces.append,
+            faults=spec.faults,
+            worker_timeout=spec.worker_timeout,
+            num_workers=spec.num_workers,
         )
         server.start()
-        workers: list = []
-        if spec.transport == "socket":
-            import multiprocessing
-
-            mp = multiprocessing.get_context("spawn")
-            for w in range(spec.num_workers):
-                p = mp.Process(
-                    target=socket_worker_main,
-                    args=(transport.address, spec.cfg, w),
-                    daemon=True,
-                )
-                p.start()
-                workers.append(p)
-        else:
-            grad_fn = make_grad_fn(spec.cfg)  # one jit cache, shared by threads
-            for w in range(spec.num_workers):
-                t = threading.Thread(
-                    target=worker_loop,
-                    args=(transport.worker_endpoint(), grad_fn, w),
-                    daemon=True,
-                    name=f"ps-worker-{w}",
-                )
-                t.start()
-                workers.append(t)
+        workers = [
+            transport.start_worker(w, spec.cfg, faults=spec.faults, retry=spec.retry)
+            for w in range(spec.num_workers)
+        ]
         self._server, self._transport, self._workers = server, transport, workers
         self._submitted = 0
 
@@ -175,3 +156,9 @@ class DistributedAsyncEngine(_EngineBase):
         if self._server is None:
             return
         self._stop_cluster(finalize=False)
+
+    def liveness(self) -> dict:
+        """The server's per-worker health snapshot ({} before first tick)."""
+        if self._server is None:
+            return {}
+        return self._server.liveness()

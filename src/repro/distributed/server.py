@@ -1,4 +1,4 @@
-"""The live parameter server: serial applies, measured staleness.
+"""The live parameter server: serial applies, measured staleness, liveness.
 
 One loop thread owns the training state and consumes ONE message stream from
 the transport (worker pulls/pushes interleaved with engine control messages),
@@ -13,19 +13,34 @@ tau as ``StepContext.tau``, so ``scale_by_staleness`` weights the update by
 ``alpha(tau)/alpha_c`` exactly as the paper's Alg. 1 prescribes, and
 ``record_taus`` feeds the in-jit histogram the online-adaptation refresh
 drains.  Measurements stream to an :class:`~repro.async_engine.events
-.TraceWriter` so a live run leaves a replayable staleness trace behind.
+.TraceWriter` as v2 records ``(tau, worker, t_pull, t_push)`` — both stamps
+read from THIS server's wall clock (at snapshot dispatch and at apply), so
+``t_push - t_pull`` is the true round-trip latency behind the version-count
+tau, comparable across in-proc and multi-process fabrics alike.
+
+Fault tolerance: every pull/push doubles as a heartbeat (per-worker
+``last_seen``).  With a ``worker_timeout`` the loop sweeps liveness and
+RECLAIMS the in-flight slot of any worker that went silent after taking
+work — its batch goes back on the queue for a live worker, so the engine's
+in-flight-window pacing can never deadlock waiting on a ghost.  A declared-
+dead worker that was merely slow is resurrected by its next message, and its
+late push still applies (one more very stale gradient — exactly what async-
+SGD theory absorbs, Alistarh et al. 1803.08841).  A :class:`~repro
+.distributed.faults.FaultPlan` injects server-side chaos (dropped acks, slow
+applies) for the chaos test matrix.
 
 The engine talks to the loop through thread-safe calls: ``submit_batch``
 (batches ride the same queue, so worker dispatch stays totally ordered),
 ``await_applied`` / ``snapshot`` (the tick boundary), ``call`` (refresh runs
-*between* applies — atomic with respect to the update stream), and
-``request_stop`` / ``shutdown``.
+*between* applies — atomic with respect to the update stream), ``liveness``
+(per-worker health), and ``request_stop`` / ``shutdown`` (idempotent).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Any, Callable
 
@@ -45,6 +60,9 @@ class ParameterServer:
     — delay is real here, not simulated) whose params must be float32: the
     wire format is the packed flat ``(N,)`` f32 buffer.  ``on_trace`` is
     called whenever jax (re)traces the apply (the engine's retrace counter).
+    ``worker_timeout`` (seconds of silence after taking work) arms the
+    liveness sweep; ``faults`` injects server-side chaos; ``num_workers``
+    sizes the ``live_frac`` metric (None: liveness fractions stay 1.0).
     """
 
     def __init__(
@@ -57,6 +75,9 @@ class ParameterServer:
         trace: Any = None,
         on_trace: Callable | None = None,
         poll_s: float = 0.05,
+        faults: Any = None,
+        worker_timeout: float | None = None,
+        num_workers: int | None = None,
     ):
         from repro.training.steps import _fused_form, _resolve_pipeline
 
@@ -114,6 +135,15 @@ class ParameterServer:
         self._parked: deque = deque()  # (worker_id, reply_fn) awaiting a batch
         self._stopping = False
         self._thread: threading.Thread | None = None
+        self._shutdown_done = False
+        # -- liveness bookkeeping (loop-thread writes, lock-guarded reads) ---
+        self._num_workers = num_workers
+        self._worker_timeout = worker_timeout
+        self._faults = faults.for_server() if faults is not None else None
+        self._last_seen: dict[int, float] = {}
+        self._inflight: dict[int, Any] = {}  # wid -> dispatched batch
+        self._dead: set[int] = set()
+        self._reclaimed = 0
 
     # -- engine-facing API (thread-safe) ------------------------------------
 
@@ -139,16 +169,32 @@ class ParameterServer:
         if self._error is not None:
             raise RuntimeError("parameter server loop failed") from self._error
         if not ok:
+            live = self.liveness()
             raise TimeoutError(
                 f"parameter server: no update applied within {timeout}s "
-                f"(at version {self.version}, waiting for {target_version} — "
-                "dead worker or starved batch queue?)"
+                f"(at version {self.version}, waiting for {target_version}; "
+                f"dead workers: {live['dead'] or 'none'}, "
+                f"in flight: {live['in_flight'] or 'none'} — "
+                "starved batch queue, or every worker is gone?)"
             )
 
     def snapshot(self) -> tuple[Any, dict]:
         """Latest state + latest applied-update metrics (consistent pair)."""
         with self._cond:
             return self._state, dict(self._metrics)
+
+    def liveness(self) -> dict:
+        """Per-worker health: last-seen stamps, declared-dead set, in-flight
+        slots, batches reclaimed from dead workers so far."""
+        with self._cond:
+            return {
+                "num_workers": self._num_workers,
+                "last_seen": dict(self._last_seen),
+                "dead": sorted(self._dead),
+                "in_flight": sorted(self._inflight),
+                "reclaimed": self._reclaimed,
+                "live_frac": float(self._live_frac()),
+            }
 
     def call(self, fn: Callable[[Any], Any], timeout: float = 120.0) -> Any:
         """Run ``fn(state) -> state`` inside the loop, between applies."""
@@ -166,33 +212,85 @@ class ParameterServer:
         self._transport.send(("stop",))
 
     def shutdown(self, timeout: float = 30.0) -> None:
-        """Stop the loop thread (after ``request_stop`` + worker joins)."""
+        """Stop the loop thread (after ``request_stop`` + worker joins).
+        Idempotent: a second call — teardown paths can race finish/abort —
+        is a no-op instead of a second send into a possibly-closed fabric."""
+        if self._shutdown_done:
+            return
+        self._shutdown_done = True
         self._transport.send(("shutdown",))
         if self._thread is not None:
             self._thread.join(timeout=timeout)
 
     # -- loop internals ------------------------------------------------------
 
+    def _live_frac(self) -> float:
+        if not self._num_workers:
+            return 1.0
+        return max(self._num_workers - len(self._dead), 0) / self._num_workers
+
     def _params_np(self) -> np.ndarray:
         p = self._state.params if self._pack is None else self._pack(self._state.params)
         return np.asarray(p, np.float32)
 
+    def _heartbeat(self, wid: int) -> None:
+        self._last_seen[wid] = time.time()
+        if wid in self._dead:  # merely slow, not dead: resurrect
+            with self._cond:
+                self._dead.discard(wid)
+                self._metrics["live_frac"] = np.float32(self._live_frac())
+
+    def _check_liveness(self) -> None:
+        """Reclaim in-flight slots of silent workers (module docstring)."""
+        if self._worker_timeout is None or self._stopping:
+            return
+        now = time.time()
+        for wid in list(self._inflight):
+            seen = self._last_seen.get(wid, now)
+            if now - seen <= self._worker_timeout:
+                continue
+            batch = self._inflight.pop(wid)
+            self._batches.appendleft(batch)  # a live worker takes it over
+            with self._cond:
+                self._dead.add(wid)
+                self._reclaimed += 1
+                self._metrics["live_frac"] = np.float32(self._live_frac())
+        self._dispatch()
+
     def _dispatch(self) -> None:
         while self._batches and self._parked and not self._stopping:
             wid, reply = self._parked.popleft()
-            batch = self._batches.popleft()
-            reply(("work", self._version, self._params_np(), jax.tree.map(np.asarray, batch)))
+            batch = jax.tree.map(np.asarray, self._batches.popleft())
+            t_pull = time.time()
+            self._inflight[wid] = batch
+            reply(("work", self._version, t_pull, self._params_np(), batch))
+
+    def _park(self, wid: int, reply) -> None:
+        # A re-pull (the worker timed out and retried) supersedes any parked
+        # entry for the same worker: the old rpc was abandoned.
+        stale = [p for p in self._parked if p[0] == wid]
+        for p in stale:
+            self._parked.remove(p)
+        self._parked.append((wid, reply))
+        self._dispatch()
 
     def _handle_push(self, msg, reply) -> None:
-        _, wid, pull_version, g_flat, loss = msg
+        _, wid, pull_version, t_pull, g_flat, loss = msg
         if self._stopping:
             if reply is not None:
                 reply(("stop",))
             return
+        self._heartbeat(wid)
+        self._inflight.pop(wid, None)
+        if self._faults is not None:
+            slow = self._faults.fire("slow_apply", wid)
+            if slow is not None:
+                time.sleep(slow.seconds)
         tau = self._version - int(pull_version)
         new_state, m = self._apply(
             self._state, jnp.asarray(g_flat, jnp.float32), jnp.int32(tau)
         )
+        t_push = time.time()
         with self._cond:
             self._state = new_state
             self._version += 1
@@ -203,11 +301,13 @@ class ParameterServer:
                 "tau": np.float32(tau),
                 "tau_mean": np.float32(self._tau_sum / max(applied, 1)),
                 "alpha": m["alpha"],
-                "live_frac": np.float32(1.0),
+                "live_frac": np.float32(self._live_frac()),
             }
             self._cond.notify_all()
         if self._trace is not None:
-            self._trace.append(tau, wid)
+            self._trace.append(tau, wid, t_pull=t_pull, t_push=t_push)
+        if self._faults is not None and self._faults.fire("drop_reply", wid) is not None:
+            return  # ack lost: the worker times out and re-pushes (dup apply)
         if reply is not None:
             reply(("ack", tau))
 
@@ -215,6 +315,7 @@ class ParameterServer:
         try:
             while True:
                 item = self._transport.recv(timeout=self._poll_s)
+                self._check_liveness()
                 if item is None:
                     if getattr(self._transport, "closed", False):
                         return
@@ -228,8 +329,8 @@ class ParameterServer:
                     if self._stopping:
                         reply(("stop",))
                     else:
-                        self._parked.append((msg[1], reply))
-                        self._dispatch()
+                        self._heartbeat(msg[1])
+                        self._park(msg[1], reply)
                 elif kind == "push":
                     self._handle_push(msg, reply)
                 elif kind == "call":

@@ -1,15 +1,32 @@
-"""Worker side of the live parameter server: pull, grad, push.
+"""Worker side of the live parameter server: pull, grad, push — and survive.
 
-A worker is a dumb loop over two rpcs:
+A worker is a loop over two rpcs:
 
-    ("pull", wid)                         -> ("work", version, p_flat, batch)
-    ("push", wid, version, g_flat, loss)  -> ("ack", tau) | ("stop",)
+    ("pull", wid)                                 -> ("work", version, t_pull,
+                                                      p_flat, batch)
+    ("push", wid, version, t_pull, g_flat, loss)  -> ("ack", tau) | ("stop",)
 
 The wire format is flat ``(N,)`` float32 both ways — the same packed layout
 the fused pipeline keeps resident on the server — so a worker never sees the
 param pytree; the loss is computed through the :func:`~repro.optim.transform
 .flat_view` boundary (its VJP is the pack, so the gradient is born flat),
-exactly as flat-native fused training does in-process.
+exactly as flat-native fused training does in-process.  ``t_pull`` (the
+server's wall clock at snapshot dispatch) is opaque to the worker: it echoes
+the stamp back on push so the server can record the round-trip latency
+behind the version-count tau without trusting any worker clock.
+
+Fault tolerance (the tentpole contract):
+
+* Transient transport errors (``TimeoutError`` / ``ConnectionError`` /
+  ``OSError``) are retried with capped exponential backoff per
+  :class:`~repro.distributed.faults.RetryPolicy`; retried pushes give the
+  wire at-least-once semantics (a duplicate gradient is just one more stale
+  contribution — Alistarh et al. 1803.08841).
+* ``EOFError`` means the server is GONE: the worker exits cleanly and
+  immediately — never by waiting out an rpc timeout.
+* A :class:`~repro.distributed.faults.FaultPlan` injects worker-side chaos
+  (crash before/after push, delayed push) at the marked points below, so the
+  server's liveness machinery is exercised by tests, not just by luck.
 
 ``worker_loop`` runs as a thread over :class:`~repro.distributed.transport
 .InProcTransport`; ``socket_worker_main`` is the importable entry a
@@ -19,11 +36,16 @@ exactly as flat-native fused training does in-process.
 
 from __future__ import annotations
 
-from typing import Callable
+import time
+from typing import Any, Callable
 
 import numpy as np
 
+from repro.distributed.faults import FaultPlan, RetryPolicy
+
 __all__ = ["make_grad_fn", "worker_loop", "socket_worker_main"]
+
+_TRANSIENT = (TimeoutError, ConnectionError, OSError)
 
 
 def make_grad_fn(cfg) -> Callable:
@@ -50,26 +72,72 @@ def make_grad_fn(cfg) -> Callable:
     return grad_fn
 
 
-def worker_loop(endpoint, grad_fn: Callable, worker_id: int) -> None:
-    """Pull/compute/push until the server says stop (at either rpc)."""
+def _rpc_with_retry(endpoint, msg: Any, policy: RetryPolicy) -> Any | None:
+    """One rpc under the retry policy.  Returns the reply, or None when the
+    worker should give up cleanly: the server is gone (``EOFError``) or the
+    transient-error budget is spent."""
+    delay = policy.backoff_base
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return endpoint.rpc(msg, timeout=policy.rpc_timeout)
+        except EOFError:
+            return None  # server gone: clean exit, no retry
+        except _TRANSIENT:
+            if attempt == policy.max_retries:
+                return None
+            time.sleep(delay)
+            delay = min(delay * 2.0, policy.backoff_max)
+    return None  # unreachable; keeps the contract explicit
+
+
+def worker_loop(
+    endpoint,
+    grad_fn: Callable,
+    worker_id: int,
+    *,
+    faults: FaultPlan | None = None,
+    retry: RetryPolicy | None = None,
+) -> None:
+    """Pull/compute/push until the server says stop, dies, or a planned
+    fault kills this worker (module docstring has the failure contract)."""
+    policy = retry if retry is not None else RetryPolicy()
+    inject = faults.for_worker(worker_id) if faults is not None else None
     try:
         while True:
-            reply = endpoint.rpc(("pull", worker_id))
-            if reply[0] == "stop":
+            reply = _rpc_with_retry(endpoint, ("pull", worker_id), policy)
+            if reply is None or reply[0] == "stop":
                 return
-            _, version, p_flat, batch = reply
+            _, version, t_pull, p_flat, batch = reply
             loss, g_flat = grad_fn(p_flat, batch)
-            ack = endpoint.rpc(("push", worker_id, version, g_flat, loss))
-            if ack[0] == "stop":
+            if inject is not None:
+                if inject.fire("crash_before_push", worker_id) is not None:
+                    return  # crash: the pulled batch is stranded in flight
+                delayed = inject.fire("delay_push", worker_id)
+                if delayed is not None:
+                    time.sleep(delayed.seconds)  # straggler
+            ack = _rpc_with_retry(
+                endpoint, ("push", worker_id, version, t_pull, g_flat, loss), policy
+            )
+            if ack is None or ack[0] == "stop":
                 return
+            if inject is not None and inject.fire("crash_after_push", worker_id) is not None:
+                return  # crash with nothing in flight: the pool just shrinks
     finally:
         endpoint.close()
 
 
-def socket_worker_main(address, cfg, worker_id: int) -> None:
+def socket_worker_main(
+    address,
+    cfg,
+    worker_id: int,
+    faults: FaultPlan | None = None,
+    retry: RetryPolicy | None = None,
+) -> None:
     """Entry point for a spawned worker process (importable, hence picklable
-    by ``multiprocessing.get_context("spawn")``)."""
+    by ``multiprocessing.get_context("spawn")`` — as are the fault plan and
+    retry policy riding along as args)."""
     from repro.distributed.transport import SocketWorkerEndpoint
 
-    endpoint = SocketWorkerEndpoint(tuple(address))
-    worker_loop(endpoint, make_grad_fn(cfg), worker_id)
+    timeout = (retry or RetryPolicy()).rpc_timeout
+    endpoint = SocketWorkerEndpoint(tuple(address), timeout=timeout)
+    worker_loop(endpoint, make_grad_fn(cfg), worker_id, faults=faults, retry=retry)

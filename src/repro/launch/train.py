@@ -33,6 +33,7 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.distributed.transport import transport_kinds
 from repro.optim import transform as T
 from repro.run import CheckpointHook, LogHook, RunSpec, run
 from repro.training import default_adapt_setup
@@ -51,12 +52,23 @@ def main():
                     help="engine mode override; 'distributed' runs the LIVE "
                          "parameter server (repro.distributed): --workers real "
                          "workers over --transport, measured staleness")
-    ap.add_argument("--transport", default="inproc", choices=["inproc", "socket"],
-                    help="distributed worker fabric: threads/queues, or TCP + "
-                         "multiprocessing.spawn for true multi-process")
+    ap.add_argument("--transport", default="inproc", choices=list(transport_kinds()),
+                    help="distributed worker fabric (make_transport registry): "
+                         "threads/queues, or TCP + multiprocessing.spawn for "
+                         "true multi-process")
     ap.add_argument("--trace_out", default=None,
                     help="stream the live run's measured staleness to this "
-                         "events-format trace file (distributed engine only)")
+                         "events-format trace file (distributed engine only; "
+                         "v2 records carry wall-clock pull/push stamps)")
+    ap.add_argument("--faults", default=None,
+                    help="chaos injection for the live parameter server, e.g. "
+                         "'crash_before_push:worker=1:after=2,delay_push:"
+                         "worker=0:seconds=0.2' (see repro.distributed.faults."
+                         "parse_faults; distributed engine only)")
+    ap.add_argument("--worker_timeout", type=float, default=None,
+                    help="seconds of worker silence (after taking work) before "
+                         "the server declares it dead and reclaims its "
+                         "in-flight batch (distributed engine only)")
     ap.add_argument("--workers", type=int, default=16, help="modeled async workers m")
     ap.add_argument("--ring", type=int, default=16, help="delayed-gradient ring size")
     ap.add_argument("--ring_dtype", default=None, choices=["float32", "bfloat16"],
@@ -93,6 +105,10 @@ def main():
     mode = args.engine or ("async" if args.async_psgd else "sync")
     if args.trace_out and mode != "distributed":
         ap.error("--trace_out needs --engine distributed (live staleness capture)")
+    if args.faults and mode != "distributed":
+        ap.error("--faults needs --engine distributed (live fault injection)")
+    if args.worker_timeout is not None and mode != "distributed":
+        ap.error("--worker_timeout needs --engine distributed (server liveness)")
     # The live and simulated async engines share the MindTheStep pipeline;
     # only sync mode trains the plain chain.
     use_staleness = args.async_psgd or mode in ("async", "distributed")
@@ -150,6 +166,8 @@ def main():
         fuse=args.fuse,
         transport=args.transport,
         trace_path=args.trace_out,
+        faults=args.faults,  # RunSpec parses the --faults string
+        worker_timeout=args.worker_timeout,
         refresh_every=args.refresh_every,
         seed=args.seed,
         params=params,
@@ -200,11 +218,17 @@ def main():
         from repro.async_engine.events import load_trace
         from repro.core.staleness import fit_all_models
 
-        taus = load_trace(args.trace_out)
+        taus, _who, t_pull, t_push = load_trace(
+            args.trace_out, return_workers=True, return_times=True
+        )
         fits = fit_all_models(taus, m=args.workers)
         name, (_, dist) = min(fits.items(), key=lambda kv: kv[1][1])
+        latency = ""
+        if t_pull is not None and len(taus):
+            ms = float(np.mean(t_push - t_pull)) * 1e3
+            latency = f"  latency mean={ms:.1f}ms"
         print(f"live trace: {len(taus)} updates -> {args.trace_out}  "
-              f"tau mean={float(np.mean(taus)):.2f}  "
+              f"tau mean={float(np.mean(taus)):.2f}{latency}  "
               f"best model={name} (Bhattacharyya {dist:.4f})")
     print(f"final loss: {result.history[-1]['loss']:.4f}")
 

@@ -8,7 +8,10 @@ An :class:`Engine` owns the jit boundary of a run and nothing else:
   ``spec.fuse``);
 * ``tick(state, batch)``  — one compiled training step ``-> (state, metrics)``;
 * ``refresh(state)``      — the host-side online-adaptation boundary (drain
-  the in-jit histogram, refit, swap same-shape tables; no retrace).
+  the in-jit histogram, refit, swap same-shape tables; no retrace);
+* ``finish(state)`` / ``abort()`` / ``liveness()`` — the mandatory lifecycle
+  tail (drain-and-teardown, failure-path teardown, live-machinery health);
+  no-ops for purely-compiled engines, real for the live parameter server.
 
 The three concrete engines wrap the existing factories —
 :func:`~repro.training.steps.make_step`,
@@ -48,15 +51,44 @@ __all__ = [
 
 @runtime_checkable
 class Engine(Protocol):
-    """The execution surface of one run; see module docstring."""
+    """The execution surface of one run.
+
+    The FULL lifecycle is part of the protocol — the orchestrator calls
+    every one of these without ``hasattr`` probing::
+
+        build (or build_template + checkpoint restore)   # once
+        tick*                                            # the training loop
+        refresh*                                         # at refresh_every
+        finish | abort                                   # exactly one, at exit
+
+    ``finish(state)`` is the success path: engines running live machinery
+    (worker threads/processes, trace captures) drain outstanding work and
+    return the fully-applied state — hooks' ``on_end`` observes its result.
+    ``abort()`` is the failure path (any exception escaping the loop): tear
+    down WITHOUT draining, leaving crash evidence (e.g. a ``.part`` trace)
+    salvageable.  ``liveness()`` reports live-machinery health (per-worker
+    last-seen / dead sets for the parameter server; ``{}`` where nothing
+    lives).  Purely-compiled engines inherit no-op defaults for all three
+    from ``_EngineBase`` — the contract is uniform, not optional.
+    """
 
     pipeline: Any
 
     def build(self) -> Any: ...
 
+    def build_template(self) -> Any: ...
+
     def tick(self, state: Any, batch: Any) -> tuple[Any, dict]: ...
 
     def refresh(self, state: Any) -> Any: ...
+
+    def require_refreshable(self, state: Any) -> None: ...
+
+    def finish(self, state: Any) -> Any: ...
+
+    def abort(self) -> None: ...
+
+    def liveness(self) -> dict: ...
 
 
 def _refresher_of(pipeline):
@@ -169,6 +201,20 @@ class _EngineBase:
         else:
             new_adapt = host_refresh(adapt, refresher, **kwargs)
         return dataclasses.replace(state, adapt=new_adapt)
+
+    # -- lifecycle defaults (Engine protocol): compiled engines hold no live
+    # machinery, so success-path finish is identity, failure-path abort and
+    # the liveness report are no-ops.  Engines that DO run live machinery
+    # (DistributedAsyncEngine) override all three.
+
+    def finish(self, state):
+        return state
+
+    def abort(self) -> None:
+        pass
+
+    def liveness(self) -> dict:
+        return {}
 
     def _make_step(self) -> Callable:
         raise NotImplementedError

@@ -10,8 +10,8 @@ tiny and mode-blind:
         state, metrics = engine.tick(state, batch)
         if refresh boundary: state = engine.refresh(state)   # then on_refresh
         hooks.on_tick
-    state = engine.finish(state)              # optional: live engines drain
-    hooks.on_end
+    state = engine.finish(state)              # success path: engines drain
+    hooks.on_end                              # (failure path: engine.abort())
 
 Engine modes, fusion, sharding, and the online-adaptation boundary live in
 :mod:`repro.run.engine`; logging/bench/eval/checkpointing live in
@@ -95,9 +95,7 @@ def run(
         # Restore needs only a shape/dtype template, not initialized arrays:
         # build_template traces the build abstractly (no model-init FLOPs, no
         # ring allocation) where the engine supports it.
-        template = (
-            engine.build_template() if hasattr(engine, "build_template") else engine.build()
-        )
+        template = engine.build_template()
         state, start_step = restore_checkpoint(
             resume_from, template, engine.pipeline, step=resume_step
         )
@@ -106,7 +104,7 @@ def run(
         )
     else:
         state = engine.build()
-    if spec.refresh_every and hasattr(engine, "require_refreshable"):
+    if spec.refresh_every:
         # Fail fast, before any (possibly TPU-scale) step runs: the refresh
         # boundary needs a refresh-capable pipeline and an AdaptState.
         engine.require_refreshable(state)
@@ -127,18 +125,16 @@ def run(
             for hook in hooks:
                 hook.on_tick(ctx)
     except BaseException:
-        # Engines running live machinery (worker threads/processes) tear it
-        # down without draining; a live trace capture stays salvageable.
-        abort = getattr(engine, "abort", None)
-        if abort is not None:
-            abort()
+        # The lifecycle's failure path: engines running live machinery
+        # (worker threads/processes) tear it down without draining; a live
+        # trace capture stays salvageable.  Part of the Engine protocol —
+        # a no-op for purely-compiled engines.
+        engine.abort()
         raise
-    finish = getattr(engine, "finish", None)
-    if finish is not None:
-        # Live engines drain outstanding work here, so on_end hooks (e.g. a
-        # final checkpoint) observe the fully-applied state.
-        state = finish(ctx.state)
-        ctx.state = state
+    # The lifecycle's success path: live engines drain outstanding work
+    # here, so on_end hooks (e.g. a final checkpoint) observe the
+    # fully-applied state.  Identity for purely-compiled engines.
+    ctx.state = state = engine.finish(ctx.state)
     for hook in hooks:
         hook.on_end(ctx)
     return RunResult(

@@ -24,6 +24,9 @@ import dataclasses
 from typing import Any, Callable, Iterable, Iterator
 
 MODES = ("sync", "async", "sharded_async", "distributed")
+# The canonical transport registry lives in repro.distributed.transport
+# (make_transport / transport_kinds); this mirror only serves light-import
+# validation for non-distributed specs and the docstring.
 TRANSPORTS = ("inproc", "socket")
 
 __all__ = ["RunSpec", "MODES", "TRANSPORTS"]
@@ -42,7 +45,9 @@ class RunSpec:
     ``WorkerAdaptState`` for ``sharded_async``).  ``mode="distributed"``
     runs the LIVE parameter server (:mod:`repro.distributed`):
     ``num_workers`` real workers over ``transport``, measured staleness
-    streamed to ``trace_path``.
+    streamed to ``trace_path``; ``faults`` (a FaultPlan, or a ``--faults``
+    style string) injects chaos, ``worker_timeout`` arms the server's
+    liveness sweep, and ``retry`` tunes worker rpc timeout/backoff.
     """
 
     cfg: Any = None
@@ -70,7 +75,11 @@ class RunSpec:
 
     # -- live parameter server (mode="distributed") --------------------------
     transport: str = "inproc"  # worker fabric: threads/queues | TCP + spawn
+    transport_opts: dict | None = None  # make_transport(**opts) extras
     trace_path: str | None = None  # stream measured staleness to this file
+    faults: Any = None  # FaultPlan (or parse_faults string) — chaos injection
+    worker_timeout: float | None = None  # liveness: silence after taking work
+    retry: Any = None  # RetryPolicy for worker rpc timeout/backoff
 
     # -- refresh policy (online adaptation boundary) -------------------------
     refresh_every: int = 0
@@ -80,9 +89,23 @@ class RunSpec:
 
     def __post_init__(self):
         assert self.mode in MODES, f"mode must be one of {MODES}, got {self.mode!r}"
-        assert self.transport in TRANSPORTS, (
-            f"transport must be one of {TRANSPORTS}, got {self.transport!r}"
-        )
+        if self.mode == "distributed":
+            # Validate against the LIVE transport registry (plus normalize a
+            # --faults style string into a FaultPlan); lazy import keeps
+            # thread/socket machinery out of the simulated-mode path.
+            from repro.distributed.faults import parse_faults
+            from repro.distributed.transport import transport_kinds
+
+            kinds = transport_kinds()
+            assert self.transport in kinds, (
+                f"transport must be one of {kinds}, got {self.transport!r}"
+            )
+            if isinstance(self.faults, str):
+                self.faults = parse_faults(self.faults)
+        else:
+            assert self.transport in TRANSPORTS, (
+                f"transport must be one of {TRANSPORTS}, got {self.transport!r}"
+            )
         assert self.num_steps >= 0, f"num_steps must be >= 0, got {self.num_steps}"
 
     def batch_stream(self, start_step: int = 0) -> Iterator[Any]:

@@ -394,3 +394,55 @@ class TestHooks:
         from repro.checkpoint import latest_step
 
         assert latest_step(ckpt) == 5
+
+
+class TestEngineLifecycle:
+    """ISSUE-9: finish/abort/liveness are Engine-protocol members, not
+    duck-typed extras — the orchestrator calls them without probing."""
+
+    def test_lifecycle_defaults_are_noops(self, small_cfg):
+        from repro.run.engine import Engine, make_engine
+
+        for mode in ("sync", "async"):
+            eng = make_engine(_spec_for(mode, small_cfg))
+            assert isinstance(eng, Engine)  # structural: full lifecycle present
+            state = eng.build()
+            assert eng.finish(state) is state  # purely-compiled: identity
+            assert eng.abort() is None
+            assert eng.liveness() == {}
+
+    def test_orchestrator_never_probes_the_engine(self):
+        import inspect
+
+        from repro.run import orchestrator
+
+        src = inspect.getsource(orchestrator)
+        assert "hasattr(engine" not in src
+        assert "getattr(engine" not in src
+
+    def test_finish_on_success_abort_on_failure(self, small_cfg):
+        from repro.run.engine import SyncEngine
+
+        calls = []
+
+        class Recording(SyncEngine):
+            def finish(self, state):
+                calls.append("finish")
+                return super().finish(state)
+
+            def abort(self):
+                calls.append("abort")
+
+        spec = _spec_for("sync", small_cfg, num_steps=2)
+        run(spec, engine=Recording(spec))
+        assert calls == ["finish"]
+
+        calls.clear()
+
+        class Boom(Hook):
+            def on_tick(self, ctx):
+                raise RuntimeError("boom")
+
+        with pytest.raises(RuntimeError, match="boom"):
+            run(spec, engine=Recording(spec), hooks=[Boom()])
+        assert calls == ["abort"]  # failure path tears down, never drains
