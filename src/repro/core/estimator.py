@@ -67,6 +67,7 @@ class OnlineStalenessEstimator:
         total = self.counts.sum()
         if total == 0:
             # uninformed prior: Poisson(m) — the paper's default hypothesis
+            # reprolint: disable=RL001 — host-side estimator; m is a python int
             return S.Poisson(float(max(self.m, 1))).pmf_table(self.tau_max)
         return self.counts / total
 

@@ -43,6 +43,11 @@ __all__ = [
 ]
 
 
+# Host-side numpy distribution math: pmf tables are computed once when a step
+# is built and enter jit as constants — nothing here runs inside the tick.
+# reprolint: disable-file=RL001
+
+
 def _as_int_array(k) -> np.ndarray:
     k = np.asarray(k)
     if not np.issubdtype(k.dtype, np.integer):

@@ -36,7 +36,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -80,6 +80,7 @@ class DistributedAsyncEngine(_EngineBase):
         from repro.distributed.transport import make_transport
 
         spec = self.spec
+        # reprolint: disable=RL001 — one sync per run at engine start, not per tick
         self._base_version = int(state.step)
         if spec.trace_path:
             from repro.async_engine.events import TraceWriter

@@ -193,6 +193,7 @@ class ParameterServer:
                 "dead": sorted(self._dead),
                 "in_flight": sorted(self._inflight),
                 "reclaimed": self._reclaimed,
+                # reprolint: disable=RL001 — host control plane, python floats
                 "live_frac": float(self._live_frac()),
             }
 
@@ -234,9 +235,11 @@ class ParameterServer:
         return np.asarray(p, np.float32)
 
     def _heartbeat(self, wid: int) -> None:
-        self._last_seen[wid] = time.time()
-        if wid in self._dead:  # merely slow, not dead: resurrect
-            with self._cond:
+        # _last_seen is read under the lock by liveness(); stamp it under the
+        # same lock (Condition wraps an RLock, so lock-holding callers nest).
+        with self._cond:
+            self._last_seen[wid] = time.time()
+            if wid in self._dead:  # merely slow, not dead: resurrect
                 self._dead.discard(wid)
                 self._metrics["live_frac"] = np.float32(self._live_frac())
 
@@ -249,12 +252,12 @@ class ParameterServer:
             seen = self._last_seen.get(wid, now)
             if now - seen <= self._worker_timeout:
                 continue
-            batch = self._inflight.pop(wid)
-            self._batches.appendleft(batch)  # a live worker takes it over
             with self._cond:
+                batch = self._inflight.pop(wid)
                 self._dead.add(wid)
                 self._reclaimed += 1
                 self._metrics["live_frac"] = np.float32(self._live_frac())
+            self._batches.appendleft(batch)  # a live worker takes it over
         self._dispatch()
 
     def _dispatch(self) -> None:
@@ -262,7 +265,8 @@ class ParameterServer:
             wid, reply = self._parked.popleft()
             batch = jax.tree.map(np.asarray, self._batches.popleft())
             t_pull = time.time()
-            self._inflight[wid] = batch
+            with self._cond:  # liveness() snapshots _inflight under the lock
+                self._inflight[wid] = batch
             reply(("work", self._version, t_pull, self._params_np(), batch))
 
     def _park(self, wid: int, reply) -> None:
@@ -281,7 +285,8 @@ class ParameterServer:
                 reply(("stop",))
             return
         self._heartbeat(wid)
-        self._inflight.pop(wid, None)
+        with self._cond:  # liveness() snapshots _inflight under the lock
+            self._inflight.pop(wid, None)
         if self._faults is not None:
             slow = self._faults.fire("slow_apply", wid)
             if slow is not None:

@@ -67,6 +67,7 @@ def make_grad_fn(cfg) -> Callable:
     def grad_fn(p_flat, batch):
         batch = jax.tree.map(jnp.asarray, batch)
         (loss, _aux), g_flat = vg(jnp.asarray(p_flat), batch)
+        # reprolint: disable=RL001 — deliberate device->wire copy for the transport
         return float(loss), np.asarray(g_flat, np.float32)
 
     return grad_fn

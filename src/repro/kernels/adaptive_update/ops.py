@@ -15,7 +15,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.adaptive_update.kernel import BLOCK_ROWS, LANES, fused_update_call
 from repro.kernels.adaptive_update.ref import adaptive_update_ref

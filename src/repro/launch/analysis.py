@@ -12,7 +12,6 @@ conservative full size).
 from __future__ import annotations
 
 import re
-from typing import Any
 
 from repro.launch.mesh import HARDWARE
 
@@ -46,7 +45,6 @@ def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
         if "=" not in stripped:
             continue
         lhs, _, rhs = stripped.partition("=")
-        m = re.match(r"\s*(?:\(?[\w.%-]*\)?\s*)?", rhs)
         # identify which collective op this instruction is (start-anchored on
         # the op name after the result shape(s))
         for coll in _COLLECTIVES:

@@ -13,8 +13,6 @@ abstract pytrees always match the concrete ones.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

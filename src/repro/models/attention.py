@@ -18,8 +18,6 @@ when ``config.use_pallas`` is set (TPU target; validated in interpret mode).
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

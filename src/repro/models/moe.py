@@ -59,6 +59,7 @@ def init_moe(key, cfg) -> Params:
 
 
 def capacity_for(tokens: int, num_experts: int, top_k: int, capacity_factor: float) -> int:
+    # reprolint: disable=RL001 — pure python ints: static capacity at trace time
     cap = int(np.ceil(top_k * tokens * capacity_factor / num_experts))
     return max(-(-cap // 4) * 4, 4)  # lane-friendly multiple of 4
 

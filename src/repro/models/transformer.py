@@ -15,7 +15,6 @@ Each layer type owns its decode cache:
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -70,6 +70,12 @@ _BODIES = {
     ("fused_apply",): "momentum",
     ("adam", "scale"): "adam",
 }
+# Kinds deliberately left on the unfused tree-pipeline path.  reprolint RL005
+# requires every transform kind to be planned above or declared here — a new
+# kind that silently falls off the fused tick is a perf regression, not a
+# style choice.  Currently empty: clip folds into FusionPlan.clip, everything
+# else is a prefix or a body.
+UNFUSEABLE_KINDS: tuple = ()
 
 
 @dataclasses.dataclass(eq=False)
@@ -107,6 +113,7 @@ def plan_fusion(pipeline) -> FusionPlan | None:
         i += 1
     clip = None
     if i < len(links) and links[i].kind == "clip":
+        # reprolint: disable=RL001 — plan time (step build), not the tick
         clip = float(links[i].max_norm)
         i += 1
     body = links[i:]

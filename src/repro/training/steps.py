@@ -255,6 +255,7 @@ def _resolve_alpha_c(alpha_c, transform) -> float:
     if alpha_c is not None:
         return float(alpha_c)
     link = T.staleness_link(transform) if transform is not None else None
+    # reprolint: disable=RL001 — step-build time; alpha_c is a python float field
     return float(link.alpha_c) if link is not None else 1.0
 
 

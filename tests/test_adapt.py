@@ -474,7 +474,6 @@ class TestMakeStepParity:
     def test_drop_stale_absorbed_into_combine(self, small_cfg):
         """A drop_stale link must zero exactly the workers whose tau exceeds
         the threshold (on top of the ring's own live mask)."""
-        model = Poisson(4.0)
         sched = make_schedule("constant", 0.05, tau_max=31)
         # degenerate CDF: tau == 3 always, ring deep enough to serve it
         adapt = init_adapt(sched.table, staleness_cdf(np.eye(8)[3]))

@@ -1,0 +1,696 @@
+"""reprolint self-tests: per-rule positive/negative/suppressed fixtures, the
+cross-file RL004/RL005 trees, the baseline ratchet, and the acceptance check
+that a seeded violation of every rule makes the CLI exit non-zero.
+
+Unmarked on purpose: this is a pure-stdlib suite and rides the core CI leg.
+"""
+
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+# `python -m pytest` from the repo root puts the cwd on sys.path; when pytest
+# is invoked some other way, anchor the import on this file's location.
+_REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(_REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(_REPO_ROOT))
+
+from tools.reprolint.baseline import load_baseline, split_findings, write_baseline
+from tools.reprolint.cli import main as cli_main
+from tools.reprolint.core import Finding, Project, collect_files, run_rules
+from tools.reprolint.rules import ALL_RULES, rules_by_id
+
+
+def write_tree(root: Path, tree: dict) -> None:
+    for rel, src in tree.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+def lint(tmp_path: Path, tree: dict, rules=None) -> list:
+    write_tree(tmp_path, tree)
+    paths = [p for p in ("src", "tests") if (tmp_path / p).exists()]
+    project = Project(tmp_path, collect_files(paths, tmp_path))
+    return run_rules(project, rules_by_id(rules))
+
+
+def rule_ids(found) -> set:
+    return {f.rule for f in found}
+
+
+# ---------------------------------------------------------------------------
+# RL001 — host sync in hot paths
+# ---------------------------------------------------------------------------
+
+HOT_SYNC = {
+    "src/repro/steps.py": """
+        def make_step(cfg):
+            def step(state, batch):
+                loss = compute(state, batch)
+                record(loss.item())
+                return state
+            return step
+        """
+}
+
+
+class TestHostSyncInHotPath:
+    def test_item_in_step_closure_flagged(self, tmp_path):
+        found = lint(tmp_path, HOT_SYNC, rules=["RL001"])
+        assert rule_ids(found) == {"RL001"}
+        assert "make_step.step" in found[0].message
+
+    def test_reachable_helper_flagged_with_root_provenance(self, tmp_path):
+        tree = {
+            "src/repro/steps.py": """
+                from repro.util import pull
+
+                def make_step(cfg):
+                    def step(state):
+                        return pull(state)
+                    return step
+                """,
+            "src/repro/util.py": """
+                import jax
+
+                def pull(state):
+                    return jax.device_get(state)
+                """,
+        }
+        found = lint(tmp_path, tree, rules=["RL001"])
+        assert len(found) == 1
+        assert found[0].path.endswith("util.py")
+        assert "reachable from `make_step`" in found[0].message
+
+    def test_cold_function_not_flagged(self, tmp_path):
+        tree = {
+            "src/repro/report.py": """
+                def summarize(state):
+                    return state.loss.item()
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL001"]) == []
+
+    def test_static_shape_cast_not_flagged(self, tmp_path):
+        tree = {
+            "src/repro/steps.py": """
+                def make_step(cfg):
+                    def step(state):
+                        n = int(state.params.shape[0])
+                        m = float(len(state.taus))
+                        return n + m
+                    return step
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL001"]) == []
+
+    def test_engine_tick_is_a_root(self, tmp_path):
+        tree = {
+            "src/repro/engine.py": """
+                import numpy as np
+
+                class LiveEngine:
+                    def tick(self, state):
+                        return np.asarray(state.grads)
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL001"])
+        assert len(found) == 1 and "LiveEngine.tick" in found[0].message
+
+    def test_inline_suppression(self, tmp_path):
+        tree = {
+            "src/repro/steps.py": """
+                def make_step(cfg):
+                    def step(state):
+                        # reprolint: disable=RL001 — deliberate boundary sync
+                        return state.loss.item()
+                    return step
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL002 — use-after-donation
+# ---------------------------------------------------------------------------
+
+
+class TestUseAfterDonation:
+    def test_read_after_donate_flagged(self, tmp_path):
+        tree = {
+            "src/repro/run.py": """
+                import jax
+
+                def drive(fn, state, batch):
+                    step = jax.jit(fn, donate_argnums=(0,))
+                    out = step(state, batch)
+                    log(state)
+                    return out
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL002"])
+        assert len(found) == 1 and "`state`" in found[0].message
+
+    def test_rebinding_result_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/run.py": """
+                import jax
+
+                def drive(fn, state, batch):
+                    step = jax.jit(fn, donate_argnums=(0,))
+                    state = step(state, batch)
+                    log(state)
+                    return state
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL002"]) == []
+
+    def test_non_donated_position_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/run.py": """
+                import jax
+
+                def drive(fn, state, batch):
+                    step = jax.jit(fn, donate_argnums=(0,))
+                    state = step(state, batch)
+                    log(batch)
+                    return state
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL003 — retrace hazards
+# ---------------------------------------------------------------------------
+
+
+class TestRetraceHazard:
+    def test_array_default_and_traced_branch(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import jax
+                import numpy as np
+
+                @jax.jit
+                def f(x, w=np.zeros(3)):
+                    if x > 0:
+                        return x + w
+                    return w - x
+                """
+        }
+        msgs = " | ".join(f.message for f in lint(tmp_path, tree, rules=["RL003"]))
+        assert "array-valued default" in msgs
+        assert "python `if` on traced argument" in msgs
+
+    def test_jit_in_loop(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import jax
+
+                def build(fns):
+                    return [jax.jit(fn) for fn in fns] if False else None
+
+                def build2(fns):
+                    out = []
+                    for fn in fns:
+                        out.append(jax.jit(fn))
+                    return out
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL003"])
+        assert any("inside a loop" in f.message for f in found)
+
+    def test_is_none_branch_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import jax
+
+                @jax.jit
+                def f(x, mask=None):
+                    if mask is not None:
+                        return x * mask
+                    return x
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL003"]) == []
+
+    def test_unjitted_function_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import numpy as np
+
+                def f(x, w=np.zeros(3)):
+                    if x > 0:
+                        return x + w
+                    return w
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL003"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL004 — Pallas kernel contract (cross-file)
+# ---------------------------------------------------------------------------
+
+KERNEL_OK = {
+    "src/repro/kernels/fam/kernel.py": """
+        __all__ = ["fam_call", "BLOCK"]
+        BLOCK = 8
+
+        def fam_call(x):
+            return x
+        """,
+    "src/repro/kernels/fam/ref.py": """
+        __all__ = ["fam_ref"]
+
+        def fam_ref(x):
+            return x
+        """,
+    "tests/test_fam.py": """
+        import pytest
+
+        pytestmark = pytest.mark.pallas
+
+        def test_parity():
+            assert fam_call(1) == fam_ref(1)
+        """,
+}
+
+
+class TestKernelContract:
+    def test_tested_kernel_with_oracle_is_clean(self, tmp_path):
+        assert lint(tmp_path, KERNEL_OK, rules=["RL004"]) == []
+
+    def test_missing_ref_oracle_flagged(self, tmp_path):
+        tree = dict(KERNEL_OK)
+        del tree["src/repro/kernels/fam/ref.py"]
+        found = lint(tmp_path, tree, rules=["RL004"])
+        assert any("no ref.py oracle" in f.message for f in found)
+
+    def test_untested_public_kernel_flagged(self, tmp_path):
+        tree = dict(KERNEL_OK)
+        tree["tests/test_fam.py"] = """
+            def test_unrelated():
+                assert True
+            """
+        found = lint(tmp_path, tree, rules=["RL004"])
+        assert any("no pallas-marked parity test" in f.message for f in found)
+
+    def test_stem_match_covers_flat_sibling(self, tmp_path):
+        tree = dict(KERNEL_OK)
+        tree["src/repro/kernels/fam/kernel.py"] = """
+            __all__ = ["fam_call", "fam_flat"]
+
+            def fam_call(x):
+                return x
+
+            def fam_flat(x):
+                return x
+            """
+        assert lint(tmp_path, tree, rules=["RL004"]) == []
+
+    def test_ops_wrapper_transitivity(self, tmp_path):
+        tree = dict(KERNEL_OK)
+        tree["src/repro/kernels/fam/kernel.py"] = """
+            __all__ = ["fam_inner_call"]
+
+            def fam_inner_call(x):
+                return x
+            """
+        tree["src/repro/kernels/fam/ops.py"] = """
+            from repro.kernels.fam.kernel import fam_inner_call
+
+            __all__ = ["fam"]
+
+            def fam(x):
+                return fam_inner_call(x)
+            """
+        tree["tests/test_fam.py"] = """
+            import pytest
+
+            @pytest.mark.pallas
+            class TestFam:
+                def test_parity(self):
+                    assert fam(1) == fam_ref(1)
+            """
+        assert lint(tmp_path, tree, rules=["RL004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL005 — fusion coverage (cross-file)
+# ---------------------------------------------------------------------------
+
+FUSION_BASE = {
+    "src/repro/optim/transform.py": """
+        def scale(f):
+            return Link(kind="scale")
+
+        def warp(f):
+            return Link(kind="warp")
+        """,
+    "src/repro/optim/fuse.py": """
+        _BODIES = {("scale",): "sgd"}
+        UNFUSEABLE_KINDS: tuple = ()
+        """,
+}
+
+
+class TestFusionCoverage:
+    def test_unclassified_kind_flagged(self, tmp_path):
+        found = lint(tmp_path, FUSION_BASE, rules=["RL005"])
+        assert len(found) == 1 and "`warp`" in found[0].message
+
+    def test_unfuseable_declaration_covers(self, tmp_path):
+        tree = dict(FUSION_BASE)
+        tree["src/repro/optim/fuse.py"] = """
+            _BODIES = {("scale",): "sgd"}
+            UNFUSEABLE_KINDS: tuple = ("warp",)
+            """
+        assert lint(tmp_path, tree, rules=["RL005"]) == []
+
+    def test_kind_comparison_in_planner_covers(self, tmp_path):
+        tree = dict(FUSION_BASE)
+        tree["src/repro/optim/fuse.py"] = """
+            _BODIES = {("scale",): "sgd"}
+            UNFUSEABLE_KINDS: tuple = ()
+
+            def plan(links):
+                return [l for l in links if l.kind == "warp"]
+            """
+        assert lint(tmp_path, tree, rules=["RL005"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL006 — concurrency discipline in distributed/
+# ---------------------------------------------------------------------------
+
+
+class TestLockDiscipline:
+    def test_unguarded_mutation_of_guarded_attr(self, tmp_path):
+        tree = {
+            "src/repro/distributed/box.py": """
+                import threading
+
+                class Box:
+                    def __init__(self):
+                        self._lock = threading.Lock()
+                        self._items = {}
+
+                    def read(self):
+                        with self._lock:
+                            return dict(self._items)
+
+                    def put(self, k, v):
+                        self._items[k] = v
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL006"])
+        assert len(found) == 1 and "`self._items` mutated in `Box.put`" in found[0].message
+
+    def test_guarded_mutation_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/distributed/box.py": """
+                import threading
+
+                class Box:
+                    def __init__(self):
+                        self._lock = threading.Lock()
+                        self._items = {}
+
+                    def read(self):
+                        with self._lock:
+                            return dict(self._items)
+
+                    def put(self, k, v):
+                        with self._lock:
+                            self._items[k] = v
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL006"]) == []
+
+    def test_loop_thread_only_attr_is_clean(self, tmp_path):
+        # Single-writer attrs that are never lock-accessed are a deliberate
+        # ownership pattern (the server's _batches deque), not a violation.
+        tree = {
+            "src/repro/distributed/box.py": """
+                import threading
+
+                class Box:
+                    def __init__(self):
+                        self._lock = threading.Lock()
+                        self._queue = []
+                        self._shared = 0
+
+                    def loop(self):
+                        self._queue.append(1)
+                        with self._lock:
+                            self._shared += 1
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL006"]) == []
+
+    def test_thread_without_daemon_flagged(self, tmp_path):
+        tree = {
+            "src/repro/distributed/spawn.py": """
+                import threading
+
+                def start(fn):
+                    t = threading.Thread(target=fn)
+                    t.start()
+                    return t
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL006"])
+        assert len(found) == 1 and "daemon" in found[0].message
+
+    def test_swallowed_eof_flagged_return_ok(self, tmp_path):
+        tree = {
+            "src/repro/distributed/wire.py": """
+                def pull(conn):
+                    try:
+                        return conn.recv()
+                    except EOFError:
+                        pass
+
+                def pull_ok(conn):
+                    try:
+                        return conn.recv()
+                    except EOFError:
+                        return None
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL006"])
+        assert len(found) == 1 and "swallows" in found[0].message
+
+    def test_outside_distributed_not_scanned(self, tmp_path):
+        tree = {
+            "src/repro/util.py": """
+                import threading
+
+                def start(fn):
+                    return threading.Thread(target=fn)
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL006"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RL007 — nondeterminism in traced code
+# ---------------------------------------------------------------------------
+
+
+class TestNondeterminism:
+    def test_time_and_nprandom_in_jitted(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import jax
+                import time
+                import numpy as np
+
+                @jax.jit
+                def g(x):
+                    return x * time.time() + np.random.rand()
+                """
+        }
+        msgs = " | ".join(f.message for f in lint(tmp_path, tree, rules=["RL007"]))
+        assert "wall clock" in msgs and "unkeyed numpy" in msgs
+
+    def test_pallas_kernel_body_scanned(self, tmp_path):
+        tree = {
+            "src/repro/kernels/fam/kernel.py": """
+                import random
+
+                def fam_kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] * random.random()
+                """
+        }
+        found = lint(tmp_path, tree, rules=["RL007"])
+        assert len(found) == 1 and "unkeyed stdlib" in found[0].message
+
+    def test_seeded_default_rng_is_clean(self, tmp_path):
+        tree = {
+            "src/repro/fns.py": """
+                import jax
+                import numpy as np
+
+                @jax.jit
+                def g(x):
+                    r = np.random.default_rng(0)
+                    return x
+
+                def host_loop():
+                    import time
+                    return time.time()
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL007"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions, baseline ratchet, CLI
+# ---------------------------------------------------------------------------
+
+
+class TestSuppressionAndBaseline:
+    def test_file_level_disable(self, tmp_path):
+        tree = {
+            "src/repro/steps.py": """
+                # Host-side module, never inside the tick.
+                # reprolint: disable-file=RL001
+
+                def make_step(cfg):
+                    def step(state):
+                        return state.loss.item()
+                    return step
+                """
+        }
+        assert lint(tmp_path, tree, rules=["RL001"]) == []
+
+    def test_finding_key_ignores_line_numbers(self):
+        a = Finding(rule="RL001", path="a.py", line=3, message="m")
+        b = Finding(rule="RL001", path="a.py", line=99, message="m")
+        assert a.key == b.key
+
+    def test_baseline_roundtrip_and_split(self, tmp_path):
+        f_old = Finding(rule="RL001", path="a.py", line=1, message="old")
+        f_new = Finding(rule="RL002", path="b.py", line=2, message="new")
+        path = tmp_path / "baseline.json"
+        write_baseline(path, [f_old])
+        baseline = load_baseline(path)
+        new, old, stale = split_findings([f_old, f_new], baseline)
+        assert new == [f_new] and old == [f_old] and stale == set()
+        # a fixed finding leaves a stale key behind (ratchet shrink signal)
+        new2, old2, stale2 = split_findings([f_new], baseline)
+        assert new2 == [f_new] and old2 == [] and stale2 == {f_old.key}
+
+
+SEEDED_VIOLATIONS = {
+    "RL001": HOT_SYNC,
+    "RL002": {
+        "src/repro/run.py": """
+            import jax
+
+            def drive(fn, state, batch):
+                step = jax.jit(fn, donate_argnums=(0,))
+                out = step(state, batch)
+                log(state)
+                return out
+            """
+    },
+    "RL003": {
+        "src/repro/fns.py": """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """
+    },
+    "RL004": {
+        "src/repro/kernels/fam/kernel.py": """
+            __all__ = ["fam_call"]
+
+            def fam_call(x):
+                return x
+            """
+    },
+    "RL005": FUSION_BASE,
+    "RL006": {
+        "src/repro/distributed/spawn.py": """
+            import threading
+
+            def start(fn):
+                return threading.Thread(target=fn)
+            """
+    },
+    "RL007": {
+        "src/repro/fns.py": """
+            import jax
+            import time
+
+            @jax.jit
+            def g(x):
+                return x * time.time()
+            """
+    },
+}
+
+
+class TestCli:
+    def test_all_rules_registered(self):
+        assert [r.rule_id for r in ALL_RULES] == [f"RL00{i}" for i in range(1, 8)]
+
+    def test_every_seeded_violation_fails_the_cli(self, tmp_path, capsys):
+        # The acceptance check: one planted violation per rule, each of which
+        # must make `python -m tools.reprolint` exit non-zero.
+        for rule, tree in SEEDED_VIOLATIONS.items():
+            root = tmp_path / rule
+            write_tree(root, tree)
+            code = cli_main(["src", "--root", str(root), "--no-baseline"])
+            out = capsys.readouterr().out
+            assert code == 1, f"{rule}: expected exit 1, got {code}"
+            assert rule in out, f"{rule}: finding not reported\n{out}"
+
+    def test_clean_tree_exits_zero(self, tmp_path, capsys):
+        write_tree(tmp_path, {"src/repro/ok.py": "X = 1\n"})
+        assert cli_main(["src", "--root", str(tmp_path)]) == 0
+
+    def test_baselined_finding_passes_new_one_fails(self, tmp_path, capsys):
+        root = tmp_path
+        write_tree(root, SEEDED_VIOLATIONS["RL001"])
+        base = root / "tools/reprolint/baseline.json"
+        base.parent.mkdir(parents=True)
+        assert cli_main(["src", "--root", str(root), "--write-baseline"]) == 0
+        capsys.readouterr()
+        # the same findings are now baselined: default run passes
+        assert cli_main(["src", "--root", str(root)]) == 0
+        assert "baselined" in capsys.readouterr().out
+        # a fresh violation on top of the baseline fails
+        write_tree(root, SEEDED_VIOLATIONS["RL007"])
+        assert cli_main(["src", "--root", str(root)]) == 1
+
+    def test_json_output_shape(self, tmp_path, capsys):
+        write_tree(tmp_path, SEEDED_VIOLATIONS["RL006"])
+        code = cli_main(["src", "--root", str(tmp_path), "--no-baseline", "--json"])
+        payload = json.loads(capsys.readouterr().out)
+        assert code == 1
+        assert payload["baselined"] == [] and payload["stale_baseline_keys"] == []
+        (finding,) = payload["new"]
+        assert finding["rule"] == "RL006" and finding["path"].endswith("spawn.py")
+        assert finding["line"] > 0 and finding["hint"]
+
+    def test_unknown_rule_id_is_usage_error(self, tmp_path, capsys):
+        write_tree(tmp_path, {"src/ok.py": "X = 1\n"})
+        assert cli_main(["src", "--root", str(tmp_path), "--rules", "RL999"]) == 2
+
+    def test_repo_tree_is_clean_against_committed_baseline(self, capsys):
+        # The invariant the lint CI job enforces, asserted from the suite too:
+        # the checked-in tree has no findings outside the (empty) baseline.
+        code = cli_main(["src", "tests", "--root", str(_REPO_ROOT)])
+        out = capsys.readouterr().out
+        assert code == 0, f"reprolint regressions in the working tree:\n{out}"

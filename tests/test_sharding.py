@@ -5,7 +5,6 @@ The actual multi-device lower/compile is exercised by the subprocess test in
 abstract meshes.
 """
 
-import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

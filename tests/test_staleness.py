@@ -1,6 +1,5 @@
 """Staleness distribution models (paper §IV): identities + fitting."""
 
-import math
 
 import numpy as np
 import pytest

@@ -5,7 +5,6 @@ AsyncPSGD to reach a loss threshold, at matched expected step size (eq. 26) —
 the Fig. 3 protocol on a CPU-sized problem using the exact async simulator.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Training substrate: steps, loop, data pipeline, checkpointing."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,7 @@ from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_config, reduced
 from repro.core.staleness import Poisson
 from repro.core.step_size import make_schedule
-from repro.data import classification_batches, lm_batches, make_batch_for
+from repro.data import classification_batches, lm_batches
 from repro.optim import sgd
 from repro.training import (
     init_adapt,

@@ -1,0 +1,24 @@
+"""reprolint: repo-specific static analysis for the jit/Pallas/concurrency invariants.
+
+Pure-stdlib (``ast``) — importing this package must never import jax or the
+``repro`` package, so the lint job stays dependency-free and fast.
+
+Rules (see ``tools/reprolint/rules/`` and the README "Static analysis" table):
+
+* RL001 — host-device sync in jit-hot paths
+* RL002 — use-after-donation on jitted-call arguments
+* RL003 — retrace hazards (array defaults, jit-in-loop, traced-value branches)
+* RL004 — Pallas kernel contract (same-family ref.py oracle + pallas-marked test)
+* RL005 — fusion coverage (every transform kind classified or declared unfuseable)
+* RL006 — concurrency discipline in distributed/ (locks, daemon threads, swallowed EOF)
+* RL007 — nondeterminism inside traced code (time/random in jit/Pallas bodies)
+
+Suppression: ``# reprolint: disable=RL001`` on the offending line (or alone on
+the line above it); ``# reprolint: disable-file=RL003`` near the top of a file.
+Baseline ratchet: findings listed in ``baseline.json`` are reported but do not
+fail the run; new findings do.  The baseline only ever shrinks.
+"""
+
+from tools.reprolint.core import Finding, Project, Rule, SourceFile
+
+__all__ = ["Finding", "Project", "Rule", "SourceFile"]

@@ -1,0 +1,5 @@
+import sys
+
+from tools.reprolint.cli import main
+
+sys.exit(main())

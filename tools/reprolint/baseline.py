@@ -1,0 +1,41 @@
+"""Baseline ratchet: known findings don't fail the run; new ones do.
+
+The baseline is a checked-in JSON list of finding keys
+(``rule::path::message`` — no line numbers, so unrelated edits don't churn
+it).  The contract is one-directional: entries may only ever be *removed*
+(fixed or suppressed at the site); ``--write-baseline`` regenerates the file
+from the current sweep for that purpose.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.reprolint.core import Finding
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("findings", []))
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    payload = {
+        "comment": "reprolint ratchet: entries may only be removed, never added. "
+        "Regenerate with `python -m tools.reprolint src tests --write-baseline`.",
+        "findings": sorted(f.key for f in findings),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def split_findings(
+    findings: list[Finding], baseline: set[str]
+) -> tuple[list[Finding], list[Finding], set[str]]:
+    """(new, baselined, stale-baseline-keys)."""
+    new = [f for f in findings if f.key not in baseline]
+    old = [f for f in findings if f.key in baseline]
+    stale = baseline - {f.key for f in findings}
+    return new, old, stale

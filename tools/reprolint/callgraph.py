@@ -1,0 +1,104 @@
+"""Name-resolved call graph over the scanned sources.
+
+Deliberately over-approximate: a call edge is drawn to EVERY function whose
+bare name matches the called name (``self.foo(...)``, ``mod.foo(...)`` and
+``foo(...)`` all resolve to any ``def foo``).  Nested functions are reachable
+from their enclosing function (a step builder's closures ARE its hot path).
+
+Two edges are deliberately NOT drawn, because they are exactly where "jit-hot"
+stops:
+
+* class instantiation (``ParameterServer(...)`` does trace-time setup, not
+  per-tick work) — calls to names that resolve to a class go nowhere;
+* thread/process entry points (``threading.Thread(target=f)`` — ``f`` runs on
+  its own thread; the host loop is not the compiled tick).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterable
+
+from tools.reprolint.core import Project, SourceFile, walk_own
+
+
+@dataclasses.dataclass(eq=False)
+class FunctionInfo:
+    name: str
+    qualname: str
+    node: ast.FunctionDef
+    sf: SourceFile
+    class_name: str | None
+    parent: "FunctionInfo | None"
+    root: str | None = None  # which reachability root first reached this fn
+
+
+class CallGraph:
+    def __init__(self, project: Project, *, include: Callable[[SourceFile], bool]):
+        self.functions: list[FunctionInfo] = []
+        self.by_name: dict[str, list[FunctionInfo]] = {}
+        self.class_names: set[str] = set()
+        for sf in project.files:
+            if include(sf):
+                self._index(sf)
+
+    def _index(self, sf: SourceFile) -> None:
+        def visit(node: ast.AST, class_name: str | None, parent: FunctionInfo | None, prefix: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    self.class_names.add(child.name)
+                    visit(child, child.name, parent, f"{prefix}{child.name}.")
+                elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    info = FunctionInfo(
+                        name=child.name,
+                        qualname=f"{prefix}{child.name}",
+                        node=child,
+                        sf=sf,
+                        class_name=class_name,
+                        parent=parent,
+                    )
+                    self.functions.append(info)
+                    self.by_name.setdefault(child.name, []).append(info)
+                    visit(child, class_name, info, f"{prefix}{child.name}.")
+                else:
+                    visit(child, class_name, parent, prefix)
+
+        visit(sf.tree, None, None, "")
+
+    def _called_names(self, fn: FunctionInfo) -> set[str]:
+        names: set[str] = set()
+        for node in walk_own(fn.node):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name):
+                    names.add(f.id)
+                elif isinstance(f, ast.Attribute):
+                    names.add(f.attr)
+        return names
+
+    def reachable(self, roots: Iterable[FunctionInfo]) -> list[FunctionInfo]:
+        """BFS closure over call-by-name + containment edges."""
+        seen: set[int] = set()
+        queue: list[FunctionInfo] = []
+        for r in roots:
+            r.root = r.root or r.qualname
+            queue.append(r)
+        out: list[FunctionInfo] = []
+        while queue:
+            fn = queue.pop(0)
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            out.append(fn)
+            nested = [f for f in self.functions if f.parent is fn]
+            targets = list(nested)
+            for name in self._called_names(fn):
+                if name in self.class_names:
+                    continue  # constructor: trace-time setup, not the hot path
+                targets.extend(self.by_name.get(name, ()))
+            for t in targets:
+                if id(t) not in seen:
+                    t.root = t.root or fn.root
+                    queue.append(t)
+        return out

@@ -1,0 +1,102 @@
+"""CLI: ``python -m tools.reprolint src tests [--json] [--baseline PATH]``.
+
+Exit codes: 0 — no findings outside the baseline; 1 — new findings;
+2 — usage/config error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.reprolint.baseline import load_baseline, split_findings, write_baseline
+from tools.reprolint.core import Project, collect_files, run_rules
+from tools.reprolint.rules import rules_by_id
+
+DEFAULT_BASELINE = "tools/reprolint/baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-specific static analysis (jit/Pallas/concurrency invariants)",
+    )
+    p.add_argument("paths", nargs="+", help="files or directories to scan (e.g. src tests)")
+    p.add_argument("--root", default=".", help="repo root for relative paths (default: cwd)")
+    p.add_argument(
+        "--rules",
+        default=None,
+        help="comma-separated rule ids to run (default: all RL001-RL007)",
+    )
+    p.add_argument(
+        "--baseline",
+        default=None,
+        help=f"baseline JSON (default: {DEFAULT_BASELINE} under --root, if present)",
+    )
+    p.add_argument(
+        "--no-baseline", action="store_true", help="ignore any baseline file entirely"
+    )
+    p.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="regenerate the baseline from this sweep and exit 0",
+    )
+    p.add_argument("--json", action="store_true", help="emit findings as JSON on stdout")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    root = Path(args.root).resolve()
+    try:
+        rules = rules_by_id(args.rules.split(",") if args.rules else None)
+    except ValueError as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+
+    files = collect_files(args.paths, root)
+    if not files:
+        print("reprolint: no python files found under the given paths", file=sys.stderr)
+        return 2
+    project = Project(root, files)
+    findings = run_rules(project, rules)
+
+    baseline_path = Path(args.baseline) if args.baseline else root / DEFAULT_BASELINE
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"reprolint: wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    new, old, stale = split_findings(findings, baseline)
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "new": [f.to_json() for f in new],
+                    "baselined": [f.to_json() for f in old],
+                    "stale_baseline_keys": sorted(stale),
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in new:
+            print(f.render())
+        if old:
+            print(f"reprolint: {len(old)} baselined finding(s) (not failing):")
+            for f in old:
+                print(f"  {f.path}:{f.line}: {f.rule}: {f.message}")
+        for key in sorted(stale):
+            print(f"reprolint: stale baseline entry (fixed? remove it): {key}")
+        summary = f"reprolint: {len(new)} new, {len(old)} baselined, {len(files)} files scanned"
+        print(summary)
+
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

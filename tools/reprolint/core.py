@@ -1,0 +1,194 @@
+"""Rule framework: findings, parsed sources, suppressions, the project model.
+
+A rule is per-file (``check_file``), cross-file (``check_project``), or both.
+Findings carry a stable identity key ``(rule, path, message)`` — line numbers
+churn under unrelated edits, messages don't — which is what the baseline
+ratchet (:mod:`tools.reprolint.baseline`) matches against.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at ``path:line`` with a human fix hint."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+    hint: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line}: {self.rule}: {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_DISABLE_FILE_RE = re.compile(r"#\s*reprolint:\s*disable-file=([A-Za-z0-9_,\s]+)")
+_DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+def _split_rules(spec: str) -> set[str]:
+    return {r.strip() for r in spec.split(",") if r.strip()}
+
+
+class SourceFile:
+    """One parsed module: source, AST, and its inline suppressions."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.source = path.read_text()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.lines = self.source.splitlines()
+        self._line_disable: dict[int, set[str]] = {}
+        self._file_disable: set[str] = set()
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _DISABLE_FILE_RE.search(line)
+            if m:
+                self._file_disable |= _split_rules(m.group(1))
+                continue
+            m = _DISABLE_RE.search(line)
+            if m:
+                rules = _split_rules(m.group(1))
+                self._line_disable.setdefault(lineno, set()).update(rules)
+                if line.split("#", 1)[0].strip() == "":
+                    # Comment-only line: the suppression covers the next line.
+                    self._line_disable.setdefault(lineno + 1, set()).update(rules)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return rule in self._file_disable or rule in self._line_disable.get(line, set())
+
+    @property
+    def is_test(self) -> bool:
+        name = Path(self.rel).name
+        return name.startswith(("test_", "conftest")) or self.rel.startswith("tests/")
+
+
+class Project:
+    """Every scanned file plus path-based lookups for the cross-file rules."""
+
+    def __init__(self, root: Path, files: list[SourceFile]):
+        self.root = root
+        self.files = files
+
+    def find(self, suffix: str) -> SourceFile | None:
+        for sf in self.files:
+            if sf.rel.endswith(suffix):
+                return sf
+        return None
+
+    def matching(self, pattern: str) -> list[SourceFile]:
+        rx = re.compile(pattern)
+        return [sf for sf in self.files if rx.search(sf.rel)]
+
+
+class Rule:
+    """Base rule: override ``check_file`` and/or ``check_project``."""
+
+    rule_id = ""
+    description = ""
+
+    def check_file(self, sf: SourceFile, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+
+def collect_files(paths: Iterable[str], root: Path) -> list[SourceFile]:
+    """Parse every ``.py`` under ``paths`` (skipping caches/hidden dirs)."""
+    out: list[SourceFile] = []
+    seen: set[Path] = set()
+    for p in paths:
+        base = (root / p).resolve() if not Path(p).is_absolute() else Path(p)
+        candidates = [base] if base.is_file() else sorted(base.rglob("*.py"))
+        for f in candidates:
+            if f.suffix != ".py" or f in seen:
+                continue
+            if any(part.startswith((".", "__pycache__")) for part in f.parts):
+                continue
+            seen.add(f)
+            try:
+                rel = str(f.relative_to(root))
+            except ValueError:
+                rel = str(f)
+            out.append(SourceFile(f, rel))
+    return out
+
+
+def run_rules(project: Project, rules: Iterable[Rule]) -> list[Finding]:
+    """All non-suppressed findings, sorted by (path, line, rule)."""
+    findings: list[Finding] = []
+    by_rel = {sf.rel: sf for sf in project.files}
+    for rule in rules:
+        for sf in project.files:
+            findings.extend(rule.check_file(sf, project))
+        findings.extend(rule.check_project(project))
+    kept = []
+    for f in findings:
+        sf = by_rel.get(f.path)
+        if sf is not None and sf.suppressed(f.rule, f.line):
+            continue
+        kept.append(f)
+    return sorted(set(kept), key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``node`` without descending into nested function/class bodies."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)):
+            continue
+        yield child
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def func_defs(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def string_constants(node: ast.AST) -> set[str]:
+    return {
+        n.value
+        for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    }

@@ -1,0 +1,31 @@
+"""Rule registry: the shipped ruleset, in rule-id order."""
+
+from tools.reprolint.rules.concurrency import LockDiscipline
+from tools.reprolint.rules.fusion import FusionCoverage
+from tools.reprolint.rules.jit_rules import (
+    HostSyncInHotPath,
+    Nondeterminism,
+    RetraceHazard,
+    UseAfterDonation,
+)
+from tools.reprolint.rules.kernels import KernelContract
+
+ALL_RULES = [
+    HostSyncInHotPath(),  # RL001
+    UseAfterDonation(),  # RL002
+    RetraceHazard(),  # RL003
+    KernelContract(),  # RL004
+    FusionCoverage(),  # RL005
+    LockDiscipline(),  # RL006
+    Nondeterminism(),  # RL007
+]
+
+
+def rules_by_id(ids=None):
+    if not ids:
+        return list(ALL_RULES)
+    wanted = set(ids)
+    unknown = wanted - {r.rule_id for r in ALL_RULES}
+    if unknown:
+        raise ValueError(f"unknown rule ids: {sorted(unknown)}")
+    return [r for r in ALL_RULES if r.rule_id in wanted]

@@ -1,0 +1,184 @@
+"""RL006 — concurrency discipline in ``distributed/`` (the PR 7/8 surface).
+
+Three checks, scoped to non-test files whose path contains ``distributed/``:
+
+* a ``self.X`` attribute that is accessed under a ``with self.<lock>`` block
+  anywhere in its class must not be *mutated* outside one — single-writer
+  loop-thread attrs that are never lock-guarded are deliberately not flagged;
+* every ``threading.Thread(...)`` must pass ``daemon=`` explicitly (the repo
+  convention: daemon threads plus explicit ``join`` on the shutdown path);
+* an ``except`` arm catching ``EOFError``/``TimeoutError`` must do something
+  (return/raise/handle) — a bare ``pass`` hides transport death (PR 8 chaos).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.core import Finding, Project, Rule, SourceFile, dotted
+
+_LOCK_CTORS = {
+    "threading.Lock",
+    "threading.RLock",
+    "threading.Condition",
+    "Lock",
+    "RLock",
+    "Condition",
+}
+_MUTATORS = {
+    "append",
+    "appendleft",
+    "add",
+    "remove",
+    "discard",
+    "clear",
+    "update",
+    "setdefault",
+    "extend",
+    "pop",
+    "popleft",
+    "popitem",
+    "insert",
+}
+_SWALLOWED = {"EOFError", "TimeoutError"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+class LockDiscipline(Rule):
+    rule_id = "RL006"
+    description = "concurrency discipline in distributed/"
+
+    def check_file(self, sf: SourceFile, project: Project) -> Iterator[Finding]:
+        if sf.is_test or "distributed/" not in sf.rel:
+            return
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(sf, node)
+            if isinstance(node, ast.Call) and dotted(node.func) in {
+                "threading.Thread",
+                "Thread",
+            }:
+                if not any(kw.arg == "daemon" for kw in node.keywords):
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=sf.rel,
+                        line=node.lineno,
+                        message="threading.Thread without explicit daemon= — "
+                        "shutdown behaviour left to the default",
+                        hint="pass daemon=True (and join on the stop path) or daemon=False deliberately",
+                    )
+            if isinstance(node, ast.ExceptHandler):
+                yield from self._check_handler(sf, node)
+
+    # -- lock/attr discipline ------------------------------------------------
+
+    def _check_class(self, sf: SourceFile, cls: ast.ClassDef) -> Iterator[Finding]:
+        methods = [
+            n for n in cls.body if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        lock_attrs: set[str] = set()
+        for m in methods:
+            for node in ast.walk(m):
+                if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                    if dotted(node.value.func) in _LOCK_CTORS:
+                        for t in node.targets:
+                            attr = _self_attr(t)
+                            if attr:
+                                lock_attrs.add(attr)
+        if not lock_attrs:
+            return
+
+        # (attr, line, is_mutation, lock_held, method_name)
+        accesses: list[tuple[str, int, bool, bool, str]] = []
+
+        def visit(node: ast.AST, held: bool, method: str) -> None:
+            if isinstance(node, ast.With):
+                if any(
+                    (_self_attr(item.context_expr) or "") in lock_attrs
+                    for item in node.items
+                ):
+                    held = True
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return  # nested def: runs in a different execution context
+            attr = _self_attr(node)
+            if attr and attr not in lock_attrs:
+                is_mut = isinstance(node.ctx, (ast.Store, ast.Del))
+                accesses.append((attr, node.lineno, is_mut, held, method))
+            if isinstance(node, ast.Subscript) and isinstance(node.ctx, (ast.Store, ast.Del)):
+                attr = _self_attr(node.value)
+                if attr and attr not in lock_attrs:
+                    accesses.append((attr, node.lineno, True, held, method))
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                if node.func.attr in _MUTATORS:
+                    attr = _self_attr(node.func.value)
+                    if attr and attr not in lock_attrs:
+                        accesses.append((attr, node.lineno, True, held, method))
+            for child in ast.iter_child_nodes(node):
+                visit(child, held, method)
+
+        for m in methods:
+            for child in ast.iter_child_nodes(m):
+                visit(child, False, m.name)
+
+        guarded = {attr for attr, _, _, held, _ in accesses if held}
+        seen: set[tuple[str, str]] = set()
+        for attr, line, is_mut, held, method in accesses:
+            if not is_mut or held or attr not in guarded or method == "__init__":
+                continue
+            if (attr, method) in seen:
+                continue
+            seen.add((attr, method))
+            yield Finding(
+                rule=self.rule_id,
+                path=sf.rel,
+                line=line,
+                message=(
+                    f"`self.{attr}` mutated in `{cls.name}.{method}` without "
+                    f"holding the lock that guards it elsewhere in the class"
+                ),
+                hint="wrap the mutation in `with self.<lock>:` — Condition uses an "
+                "RLock, so nested acquisition from lock-holding callers is safe",
+            )
+
+    # -- swallowed transport errors -----------------------------------------
+
+    def _check_handler(self, sf: SourceFile, node: ast.ExceptHandler) -> Iterator[Finding]:
+        if node.type is None:
+            return
+        names = set()
+        for t in ast.walk(node.type):
+            if isinstance(t, ast.Name):
+                names.add(t.id)
+            elif isinstance(t, ast.Attribute):
+                names.add(t.attr)
+        caught = names & _SWALLOWED
+        if not caught:
+            return
+        body_real = [
+            s
+            for s in node.body
+            if not isinstance(s, ast.Pass)
+            and not (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+        ]
+        if not body_real:
+            yield Finding(
+                rule=self.rule_id,
+                path=sf.rel,
+                line=node.lineno,
+                message=(
+                    f"`except {'/'.join(sorted(caught))}` swallows a transport "
+                    "failure with a bare pass"
+                ),
+                hint="return a sentinel, re-raise, or mark the peer dead — silent "
+                "drops stall the chaos/liveness machinery",
+            )

@@ -1,0 +1,73 @@
+"""RL005 — fusion coverage (cross-file).
+
+Every ``GradientTransform`` link ``kind`` minted in ``optim/transform.py``
+must be accounted for by ``optim/fuse.py``: either it appears in a fusion
+classification table (``_BODIES``, ``*_KINDS`` tuples) or in a ``.kind``
+comparison inside the planner, or it is explicitly declared in
+``UNFUSEABLE_KINDS``.  A new transform kind that silently falls off the
+fused tick path is exactly the regression PR 5/6 benchmarks exist to catch.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.core import Finding, Project, Rule, string_constants
+
+_STRUCTURAL_KINDS = {"", "chain", "identity"}
+
+
+class FusionCoverage(Rule):
+    rule_id = "RL005"
+    description = "every transform kind classified by plan_fusion or declared unfuseable"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        transform_sf = project.find("optim/transform.py")
+        fuse_sf = project.find("optim/fuse.py")
+        if transform_sf is None or fuse_sf is None:
+            return
+
+        kinds: dict[str, int] = {}
+        for node in ast.walk(transform_sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant):
+                    v = kw.value.value
+                    if isinstance(v, str) and v not in _STRUCTURAL_KINDS:
+                        kinds.setdefault(v, kw.value.lineno)
+
+        covered: set[str] = set()
+        for node in ast.walk(fuse_sf.tree):
+            if isinstance(node, ast.Assign):
+                if any(
+                    isinstance(t, ast.Name)
+                    and (t.id.endswith("_KINDS") or t.id == "_BODIES")
+                    for t in node.targets
+                ):
+                    covered |= string_constants(node.value)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                t = node.target
+                if isinstance(t, ast.Name) and (t.id.endswith("_KINDS") or t.id == "_BODIES"):
+                    covered |= string_constants(node.value)
+            elif isinstance(node, ast.Compare):
+                touches_kind = any(
+                    isinstance(n, ast.Attribute) and n.attr == "kind"
+                    for n in ast.walk(node)
+                )
+                if touches_kind:
+                    covered |= string_constants(node)
+
+        for kind in sorted(set(kinds) - covered):
+            yield Finding(
+                rule=self.rule_id,
+                path=transform_sf.rel,
+                line=kinds[kind],
+                message=(
+                    f"transform kind `{kind}` is neither classified by plan_fusion "
+                    "nor listed in UNFUSEABLE_KINDS"
+                ),
+                hint="teach optim/fuse.py a fusion body/prefix for it, or add it to "
+                "UNFUSEABLE_KINDS with a comment explaining why it can't fuse",
+            )

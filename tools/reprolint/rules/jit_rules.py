@@ -1,0 +1,396 @@
+"""Per-file and call-graph rules around the jit boundary: RL001/RL002/RL003/RL007.
+
+Test files are exempt from all four — tests legitimately sync, donate-and-poke
+(``.is_deleted()`` regression tests), and branch on concrete values.  They are
+still scanned as *inputs* for the cross-file rules (RL004 needs the
+pallas-marked parity suites).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.callgraph import CallGraph
+from tools.reprolint.core import (
+    Finding,
+    Project,
+    Rule,
+    SourceFile,
+    dotted,
+    func_defs,
+    walk_own,
+)
+
+_JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _snippet(node: ast.AST, limit: int = 60) -> str:
+    text = ast.unparse(node)
+    return text if len(text) <= limit else text[: limit - 3] + "..."
+
+
+def jitted_function_nodes(sf: SourceFile) -> list[ast.FunctionDef]:
+    """Functions jitted in this module: ``@jax.jit`` (possibly via partial)
+    or passed by name to a ``jax.jit(...)`` call anywhere in the file."""
+    jit_args: set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and dotted(node.func) in _JIT_NAMES and node.args:
+            if isinstance(node.args[0], ast.Name):
+                jit_args.add(node.args[0].id)
+    out = []
+    for fn in func_defs(sf.tree):
+        decorated = False
+        for d in fn.decorator_list:
+            target = d.func if isinstance(d, ast.Call) else d
+            if dotted(target) in _JIT_NAMES:
+                decorated = True
+            if isinstance(d, ast.Call) and dotted(d.func) in {"partial", "functools.partial"}:
+                if any(dotted(a) in _JIT_NAMES for a in d.args):
+                    decorated = True
+        if decorated or fn.name in jit_args:
+            out.append(fn)
+    return out
+
+
+def pallas_kernel_nodes(sf: SourceFile) -> list[ast.FunctionDef]:
+    """Kernel bodies: passed to ``pallas_call`` or ``*_kernel`` under kernels/."""
+    names: set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and (dotted(node.func) or "").endswith("pallas_call"):
+            if node.args and isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+    return [
+        fn
+        for fn in func_defs(sf.tree)
+        if fn.name in names or (fn.name.endswith("_kernel") and "kernels/" in sf.rel)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# RL001 — host-device sync in jit-hot paths
+# ---------------------------------------------------------------------------
+
+
+def _static_shape_expr(arg: ast.AST) -> bool:
+    """True when the expression is trace-time metadata (shape/ndim/len),
+    where a ``float()``/``int()`` cast is legal inside a trace."""
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Attribute) and n.attr in {"shape", "ndim", "size", "dtype"}:
+            return True
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) and n.func.id == "len":
+            return True
+    return False
+
+
+class HostSyncInHotPath(Rule):
+    """RL001: ``.item()`` / ``float()``/``int()`` on arrays / ``np.asarray`` /
+    ``jax.device_get`` / ``block_until_ready`` inside functions reachable from
+    ``make_step`` / ``flat_tick_step`` / an engine ``tick`` — the exact
+    overheads the one-launch fused tick exists to eliminate (PR 4/6)."""
+
+    rule_id = "RL001"
+    description = "host-device sync in a jit-hot path"
+    ROOT_NAMES = {"make_step", "flat_tick_step", "flat_chain_step"}
+    HINT = (
+        "keep the tick hot path device-resident (jnp ops, jit-carried state); "
+        "if this sync is deliberate host-boundary work, suppress with "
+        "`# reprolint: disable=RL001` and a justifying comment"
+    )
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        graph = CallGraph(project, include=lambda sf: not sf.is_test)
+        roots = [
+            fn
+            for fn in graph.functions
+            if fn.name in self.ROOT_NAMES
+            or (fn.name == "tick" and fn.class_name and "Engine" in fn.class_name)
+        ]
+        for fn in graph.reachable(roots):
+            for node in walk_own(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                label = self._sync_label(node)
+                if label is None:
+                    continue
+                yield Finding(
+                    rule=self.rule_id,
+                    path=fn.sf.rel,
+                    line=node.lineno,
+                    message=(
+                        f"{label} `{_snippet(node)}` inside jit-hot "
+                        f"`{fn.qualname}` (reachable from `{fn.root}`)"
+                    ),
+                    hint=self.HINT,
+                )
+
+    @staticmethod
+    def _sync_label(node: ast.Call) -> str | None:
+        d = dotted(node.func)
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" and not node.args:
+            return "host sync"
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "block_until_ready":
+            return "host sync"
+        if d in {"jax.block_until_ready", "jax.device_get", "device_get"}:
+            return "host sync"
+        if d in {"np.asarray", "numpy.asarray", "onp.asarray"}:
+            return "device->host copy"
+        if isinstance(node.func, ast.Name) and node.func.id in {"float", "int"}:
+            if len(node.args) != 1:
+                return None
+            arg = node.args[0]
+            if isinstance(arg, (ast.Name, ast.Constant)):
+                return None  # plain python values; arrays reach here as exprs
+            if _static_shape_expr(arg):
+                return None
+            return "possible host sync"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# RL002 — use-after-donation
+# ---------------------------------------------------------------------------
+
+
+def _donated_positions(call: ast.Call) -> list[int] | None:
+    """Donated arg positions of a ``jax.jit(..., donate_argnums=...)`` call."""
+    if dotted(call.func) not in _JIT_NAMES:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = [e.value for e in v.elts if isinstance(e, ast.Constant)]
+            return [p for p in out if isinstance(p, int)]
+    return None
+
+
+class UseAfterDonation(Rule):
+    """RL002: a variable passed in a donated position of a jitted call and
+    read again afterwards in the same scope — the donated buffer is deleted
+    by XLA, so the read raises (or worse, sees freed memory on TPU)."""
+
+    rule_id = "RL002"
+    description = "use-after-donation on a jitted-call argument"
+    HINT = (
+        "a donated buffer is deleted after the call: rebind the result "
+        "(`state, _ = step(state, ...)`) or copy before donating (engine `_own`)"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> Iterator[Finding]:
+        if sf.is_test:
+            return
+        for fn in func_defs(sf.tree):
+            yield from self._check_scope(sf, fn)
+
+    def _check_scope(self, sf: SourceFile, fn: ast.FunctionDef) -> Iterator[Finding]:
+        donating: dict[str, list[int]] = {}
+        loads: list[tuple[int, str]] = []
+        stores: list[tuple[int, str]] = []
+        donated_calls: list[tuple[ast.Call, list[int], set[str]]] = []
+        # First pass: names bound to donating jitted callables, plus every
+        # load/store (walk_own yields in stack order, so collect before use).
+        for node in walk_own(fn):
+            if isinstance(node, ast.Name):
+                (loads if isinstance(node.ctx, ast.Load) else stores).append(
+                    (node.lineno, node.id)
+                )
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t, v = node.targets[0], node.value
+                if isinstance(t, ast.Name) and isinstance(v, ast.Call):
+                    pos = _donated_positions(v)
+                    if pos is not None:
+                        donating[t.id] = pos
+        for node in walk_own(fn):
+            if isinstance(node, (ast.Assign, ast.Expr, ast.Return, ast.AugAssign)):
+                rebound = {
+                    n.id
+                    for n in ast.walk(node)
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)
+                }
+                for call in ast.walk(node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    pos: list[int] | None = None
+                    if isinstance(call.func, ast.Name) and call.func.id in donating:
+                        pos = donating[call.func.id]
+                    elif isinstance(call.func, ast.Call):
+                        pos = _donated_positions(call.func)
+                    if pos:
+                        donated_calls.append((call, pos, rebound))
+        for call, pos, rebound in donated_calls:
+            for p in pos:
+                if p >= len(call.args) or not isinstance(call.args[p], ast.Name):
+                    continue
+                var = call.args[p].id
+                if var in rebound:
+                    continue  # result rebinds the name; later reads are fresh
+                store_lines = sorted(ln for ln, n in stores if n == var)
+                for load_line in sorted(ln for ln, n in loads if n == var):
+                    if load_line <= call.lineno:
+                        continue
+                    if any(call.lineno < s <= load_line for s in store_lines):
+                        break  # rebound before this read
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=sf.rel,
+                        line=load_line,
+                        message=(
+                            f"`{var}` is read after being passed in a donated "
+                            f"position of a jitted call in `{fn.name}`"
+                        ),
+                        hint=self.HINT,
+                    )
+                    break
+
+
+# ---------------------------------------------------------------------------
+# RL003 — retrace hazards
+# ---------------------------------------------------------------------------
+
+
+class RetraceHazard(Rule):
+    """RL003: silent-retrace hazards — unhashable/array defaults on jitted
+    functions, ``jax.jit`` inside loops (a fresh cache per iteration), and
+    Python branches on values that are traced at call time."""
+
+    rule_id = "RL003"
+    description = "retrace hazard (defaults / jit-in-loop / traced branch)"
+
+    def check_file(self, sf: SourceFile, project: Project) -> Iterator[Finding]:
+        if sf.is_test:
+            return
+        jitted = jitted_function_nodes(sf)
+        for fn in jitted:
+            yield from self._check_defaults(sf, fn)
+            yield from self._check_traced_branches(sf, fn)
+        yield from self._check_jit_in_loop(sf)
+
+    def _check_defaults(self, sf: SourceFile, fn: ast.FunctionDef) -> Iterator[Finding]:
+        defaults = list(fn.args.defaults) + [d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = None
+            if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                bad = "unhashable (mutable) default"
+            elif isinstance(d, ast.Call):
+                root = (dotted(d.func) or "").split(".", 1)[0]
+                if root in {"np", "numpy", "jnp"}:
+                    bad = "array-valued default"
+            if bad is not None:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=sf.rel,
+                    line=d.lineno,
+                    message=(
+                        f"{bad} `{_snippet(d)}` on jitted `{fn.name}` — every "
+                        "call hashes (or fails to hash) it for the jit cache"
+                    ),
+                    hint="pass the value as an argument or close over a static python scalar",
+                )
+
+    def _check_traced_branches(self, sf: SourceFile, fn: ast.FunctionDef) -> Iterator[Finding]:
+        params = {
+            a.arg
+            for a in fn.args.args + fn.args.posonlyargs + fn.args.kwonlyargs
+            if a.arg != "self"
+        }
+        for node in walk_own(fn):
+            if not isinstance(node, ast.If):
+                continue
+            test = node.test
+            guards = {"isinstance", "hasattr", "callable", "getattr"}
+            if any(
+                isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Name)
+                and n.func.id in guards
+                for n in ast.walk(test)
+            ):
+                continue
+            compares = [n for n in ast.walk(test) if isinstance(n, ast.Compare)]
+            if compares and all(
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in c.ops) for c in compares
+            ):
+                continue  # `is None` structure checks are static under jit
+            if any(
+                isinstance(n, ast.Name) and n.id in params for n in ast.walk(test)
+            ):
+                yield Finding(
+                    rule=self.rule_id,
+                    path=sf.rel,
+                    line=node.lineno,
+                    message=(
+                        f"python `if` on traced argument of jitted `{fn.name}` "
+                        f"(`{_snippet(test)}`) — branches burn a retrace per value"
+                    ),
+                    hint="use jnp.where/lax.cond, or mark the argument static_argnums",
+                )
+
+    def _check_jit_in_loop(self, sf: SourceFile) -> Iterator[Finding]:
+        def visit(node: ast.AST, loop_depth: int) -> Iterator[Finding]:
+            for child in ast.iter_child_nodes(node):
+                depth = loop_depth + isinstance(child, (ast.For, ast.While))
+                if (
+                    isinstance(child, ast.Call)
+                    and dotted(child.func) in _JIT_NAMES
+                    and loop_depth > 0
+                ):
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=sf.rel,
+                        line=child.lineno,
+                        message="`jax.jit` called inside a loop — a fresh compile cache per iteration",
+                        hint="hoist the jit out of the loop and reuse the compiled callable",
+                    )
+                yield from visit(child, depth)
+
+        yield from visit(sf.tree, 0)
+
+
+# ---------------------------------------------------------------------------
+# RL007 — nondeterminism in traced code
+# ---------------------------------------------------------------------------
+
+
+class Nondeterminism(Rule):
+    """RL007: wall-clock or unkeyed randomness inside jitted/Pallas bodies —
+    the value is baked in at trace time (stale forever) or breaks replay."""
+
+    rule_id = "RL007"
+    description = "nondeterminism (time/unkeyed random) inside traced code"
+    _TIME = {
+        "time.time",
+        "time.time_ns",
+        "time.monotonic",
+        "time.perf_counter",
+        "time.perf_counter_ns",
+    }
+
+    def check_file(self, sf: SourceFile, project: Project) -> Iterator[Finding]:
+        if sf.is_test:
+            return
+        traced = {id(fn): fn for fn in jitted_function_nodes(sf)}
+        traced.update({id(fn): fn for fn in pallas_kernel_nodes(sf)})
+        for fn in traced.values():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func) or ""
+                label = None
+                if d in self._TIME:
+                    label = f"wall clock `{d}`"
+                elif d.startswith("random."):
+                    label = f"unkeyed stdlib `{d}`"
+                elif d.startswith(("np.random.", "numpy.random.")):
+                    if not (d.endswith(".default_rng") and node.args):
+                        label = f"unkeyed numpy `{d}`"
+                if label is not None:
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=sf.rel,
+                        line=node.lineno,
+                        message=f"{label} inside traced `{fn.name}` — baked in at trace time",
+                        hint="thread a jax.random key (or a seeded np Generator) through the caller",
+                    )

@@ -1,0 +1,164 @@
+"""RL004 — the Pallas kernel contract (cross-file).
+
+Every public kernel entry point in ``src/repro/kernels/<family>/kernel.py``
+or ``fused.py`` must have (a) a same-family ``ref.py`` oracle with at least
+one public reference function, and (b) a parity test inside a
+``pytest.mark.pallas`` scope.  Coverage is recognised three ways:
+
+* the kernel name is referenced directly inside a pallas-marked scope;
+* stem match — ``fused_tick_call`` / ``fused_tick_flat`` share the stem
+  ``fused_tick``; testing one flavour covers its siblings;
+* ops-wrapper transitivity — if the family's public ``ops.py`` wrapper is
+  exercised in a pallas scope, the kernel functions that wrapper references
+  are covered (the wrapper IS the parity surface for most families).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from tools.reprolint.core import (
+    Finding,
+    Project,
+    Rule,
+    SourceFile,
+    dotted,
+    string_constants,
+)
+
+_FAMILY_RE = re.compile(r"kernels/([^/]+)/(kernel|fused)\.py$")
+_STEM_SUFFIXES = ("_call", "_flat", "_kernel")
+
+
+def _stem(name: str) -> str:
+    for suf in _STEM_SUFFIXES:
+        if name.endswith(suf):
+            return name[: -len(suf)]
+    return name
+
+
+def _public_fns(sf: SourceFile) -> list[tuple[str, int]]:
+    """(name, lineno) of public module-level functions, honouring __all__."""
+    exported = None
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in node.targets
+        ):
+            exported = string_constants(node.value)
+    defs = {
+        n.name: n.lineno for n in sf.tree.body if isinstance(n, ast.FunctionDef)
+    }
+    if exported is None:
+        exported = {n for n in defs if not n.startswith("_")}
+    return sorted((n, defs[n]) for n in exported if n in defs)
+
+
+def _identifiers(node: ast.AST) -> set[str]:
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for alias in n.names:
+                out.add(alias.name.split(".")[-1])
+    return out
+
+
+def _pallas_refs(project: Project) -> set[str]:
+    """Identifiers referenced inside pallas-marked test scopes."""
+    refs: set[str] = set()
+    for sf in project.files:
+        if not sf.is_test:
+            continue
+        scopes: list[ast.AST] = []
+        for node in sf.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "pytestmark" for t in node.targets
+            ):
+                if "pallas" in ast.dump(node.value):
+                    scopes = [sf.tree]
+                    break
+        if not scopes:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for d in node.decorator_list:
+                        target = d.func if isinstance(d, ast.Call) else d
+                        if "pallas" in (dotted(target) or ""):
+                            scopes.append(node)
+                            break
+        for scope in scopes:
+            refs |= _identifiers(scope)
+    return refs
+
+
+class KernelContract(Rule):
+    rule_id = "RL004"
+    description = "Pallas kernel needs a ref.py oracle and a pallas-marked parity test"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        refs = _pallas_refs(project)
+        ref_stems = {_stem(r) for r in refs}
+        seen_families: set[str] = set()
+        for sf in project.files:
+            m = _FAMILY_RE.search(sf.rel)
+            if not m:
+                continue
+            family = m.group(1)
+            family_dir = sf.rel[: m.start(2)]
+
+            if family not in seen_families:
+                seen_families.add(family)
+                yield from self._check_ref_oracle(project, sf, family, family_dir)
+
+            ops_covered = self._ops_covered(project, family_dir, refs, ref_stems)
+            for name, lineno in _public_fns(sf):
+                if name in refs or _stem(name) in ref_stems or name in ops_covered:
+                    continue
+                yield Finding(
+                    rule=self.rule_id,
+                    path=sf.rel,
+                    line=lineno,
+                    message=(
+                        f"public kernel `{name}` (family `{family}`) has no "
+                        "pallas-marked parity test"
+                    ),
+                    hint="add a @pytest.mark.pallas test comparing it against the "
+                    "family ref.py oracle (or export it via the tested ops wrapper)",
+                )
+
+    def _check_ref_oracle(
+        self, project: Project, sf: SourceFile, family: str, family_dir: str
+    ) -> Iterator[Finding]:
+        ref_sf = project.find(f"{family_dir}ref.py")
+        if ref_sf is None:
+            yield Finding(
+                rule=self.rule_id,
+                path=sf.rel,
+                line=1,
+                message=f"kernel family `{family}` has no ref.py oracle module",
+                hint="add <family>/ref.py with a pure jnp reference implementation",
+            )
+        elif not _public_fns(ref_sf):
+            yield Finding(
+                rule=self.rule_id,
+                path=ref_sf.rel,
+                line=1,
+                message=f"ref.py for kernel family `{family}` exports no reference functions",
+                hint="expose at least one public oracle function via __all__",
+            )
+
+    @staticmethod
+    def _ops_covered(
+        project: Project, family_dir: str, refs: set[str], ref_stems: set[str]
+    ) -> set[str]:
+        ops_sf = project.find(f"{family_dir}ops.py")
+        if ops_sf is None:
+            return set()
+        wrappers = [n for n, _ in _public_fns(ops_sf)]
+        if not any(w in refs or _stem(w) in ref_stems for w in wrappers):
+            return set()
+        return _identifiers(ops_sf.tree)
